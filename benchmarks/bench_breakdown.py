@@ -1,0 +1,44 @@
+"""Figure 5 analogue: per-operator time breakdown across TPC-H queries.
+
+The paper's finding: joins dominate join-heavy queries (Q2-Q5, Q7-Q8,
+Q20-Q22), group-by matters for Q1/Q10/Q16/Q18, filters dominate Q6/Q19/Q13.
+This benchmark reports the same decomposition from the pipeline executor's
+per-operator timers and checks the headline pattern.
+"""
+from __future__ import annotations
+
+CATS = ("filter", "join", "groupby", "orderby", "project", "other")
+
+
+def run(scale_factor: float = 0.02):
+    from repro.core.executor import SiriusEngine
+    from repro.data.tpch import generate, load_into_engine
+    from repro.data.tpch_queries import QUERIES
+
+    db = generate(scale_factor)
+    eng = SiriusEngine()
+    load_into_engine(eng, db)
+
+    print("name,us_per_call,derived")
+    dominant = {}
+    for qid in sorted(QUERIES):
+        eng.execute(QUERIES[qid]())              # warm
+        eng.executor.op_times.clear()
+        eng.execute(QUERIES[qid]())
+        times = dict(eng.executor.op_times)
+        total = sum(times.values()) or 1e-12
+        shares = {c: times.get(c, 0.0) / total for c in CATS}
+        top = max(shares, key=shares.get)
+        dominant[qid] = top
+        detail = ";".join(f"{c}={shares[c]*100:.0f}%" for c in CATS
+                          if shares[c] >= 0.005)
+        print(f"breakdown_q{qid},{total*1e6:.0f},dominant={top};{detail}")
+
+    join_heavy = [q for q in (3, 5, 7, 8, 9, 10, 21) if dominant[q] == "join"]
+    print(f"breakdown_summary,0,join_dominant_in={len(join_heavy)}of7_joinheavy"
+          f";q6_dominant={dominant[6]};q1_groupby_or_filter={dominant[1]}")
+    return dominant
+
+
+if __name__ == "__main__":
+    run()

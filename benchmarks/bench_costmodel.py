@@ -1,0 +1,85 @@
+"""Table 1 / §4.2 cost-efficiency analogue: projected accelerator speedup at
+equal rental cost.
+
+The paper's headline: 7× over DuckDB at the same $/hour (GH200 vs
+m7i.16xlarge).  No accelerator exists in this container, so this benchmark
+PROJECTS (clearly labeled): it takes the *measured* host-baseline TPC-H times
+and the dry-run roofline times of the SQL fragments (per-chip bytes/flops vs
+v5e bandwidths from artifacts), normalizes by rental cost, and reports the
+projected ratio.  Methodology and constants are in EXPERIMENTS.md.
+
+Rental constants: v5e on-demand ≈ $1.2/chip-hour; c6a.metal-class CPU at
+$7.344/h (paper Table 1).  A 6-chip v5e slice ≈ the CPU node's cost.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+CPU_COST_PER_H = 7.344
+V5E_CHIP_COST_PER_H = 1.2
+CHIPS_AT_EQUAL_COST = max(int(CPU_COST_PER_H / V5E_CHIP_COST_PER_H), 1)
+
+# v5e per chip
+PEAK = 197e12
+HBM = 819e9
+# c6a.metal-class CPU node (paper Table 1): ~400 GB/s memory bw
+CPU_MEM_BW = 400e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def run(scale_factor: float = 0.02):
+    from repro.core.fallback import FallbackEngine
+    from repro.data.tpch import generate
+    from repro.data.tpch_queries import QUERIES
+
+    db = generate(scale_factor)
+    fb = FallbackEngine(db)
+    lineitem_rows = len(db["lineitem"]["l_orderkey"])
+
+    # measured host baseline (per-row-normalized so we can scale to SF100)
+    host_times = {}
+    for qid in (1, 3, 6):
+        fb.execute(QUERIES[qid]())
+        t0 = time.perf_counter()
+        fb.execute(QUERIES[qid]())
+        host_times[qid] = time.perf_counter() - t0
+
+    sf100_rows = 600_037_902
+    scale = sf100_rows / lineitem_rows
+
+    # analytic CPU floor: a perfectly memory-bound CPU engine at 400 GB/s
+    bytes_per_row = {1: 30, 3: 44, 6: 28}   # touched cols (encoded widths)
+    print("name,us_per_call,derived")
+    results = {}
+    for qid in (1, 3, 6):
+        cpu_measured_sf100 = host_times[qid] * scale
+        cpu_floor_sf100 = sf100_rows * bytes_per_row[qid] / CPU_MEM_BW
+        # accelerator projection from the dry-run fragment artifact
+        art = os.path.join(ARTIFACT_DIR,
+                           f"sirius-tpch__q{qid}_sf100__16x16.json")
+        if os.path.exists(art):
+            with open(art) as f:
+                rec = json.load(f)
+            per_chip = max(rec["bytes_accessed_per_device"] / HBM,
+                           rec["flops_per_device"] / PEAK,
+                           rec["collective_bytes_per_device"]["total"] / 50e9)
+            # equal-cost slice = 6 chips → scale per-chip time by 256/6
+            tpu_equal_cost = per_chip * (rec["n_chips"] / CHIPS_AT_EQUAL_COST)
+            results[qid] = (cpu_measured_sf100, cpu_floor_sf100,
+                            tpu_equal_cost)
+            print(f"costmodel_q{qid},{tpu_equal_cost*1e6:.0f},"
+                  f"PROJECTED_equalcost_speedup_vs_cpu_floor="
+                  f"{cpu_floor_sf100/tpu_equal_cost:.1f}x;"
+                  f"vs_measured_numpy_scaled="
+                  f"{cpu_measured_sf100/tpu_equal_cost:.1f}x")
+        else:
+            print(f"costmodel_q{qid},0,no_dryrun_artifact")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Table 2 analogue: distributed TPC-H with compute/exchange/other breakdown.
+
+Runs Q1/Q3/Q6 (the paper's distributed subset) + Q12 (ours) on an 8-shard
+mesh in a subprocess (forced host devices), reporting the same three-way time
+decomposition as the paper — and reproducing its headline observation that
+exchange dominates Q3 while Q1/Q6 are coordinator/'other'-bound at small
+scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.core.distributed import DistributedEngine
+from repro.data.tpch import generate
+
+db = generate({sf})
+eng = DistributedEngine(db, n_shards=8)
+out = []
+for qid in (1, 3, 6, 12):
+    eng.run_query(qid)              # warm (compile)
+    eng.run_query(qid)
+    t = dict(eng.timers)
+    out.append({{"qid": qid, "compute": t.get("compute", 0.0),
+                "exchange": t.get("exchange", 0.0),
+                "other": t.get("other", 0.0), "total": t.get("total", 0.0)}})
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run(scale_factor: float = 0.01):
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    code = _WORKER.format(src=src, sf=scale_factor)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=1800)
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    if not line:
+        print(f"bench_distributed_failed,0,{proc.stderr[-400:]!r}")
+        return []
+    rows = json.loads(line[0][len("RESULT "):])
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"dist_q{r['qid']},{r['total']*1e6:.0f},"
+              f"compute_ms={r['compute']*1e3:.1f};"
+              f"exchange_ms={r['exchange']*1e3:.1f};"
+              f"other_ms={r['other']*1e3:.1f}")
+    q3 = next(r for r in rows if r["qid"] == 3)
+    print(f"dist_summary,0,q3_exchange_dominates="
+          f"{q3['exchange'] > q3['compute']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

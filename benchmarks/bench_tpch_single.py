@@ -1,0 +1,61 @@
+"""Figure 4 analogue: single-node TPC-H, accelerator engine vs host baseline.
+
+The paper compares Sirius-on-GH200 against DuckDB-on-CPU at equal rental
+cost.  This container has no accelerator, so the measured comparison is the
+jnp pipeline engine (hot run, data cached by the buffer manager) against the
+pure-numpy host engine — a *structure* validation (same plans, same results,
+per-query timings).  The cost-normalized accelerator projection lives in
+bench_costmodel.py.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(scale_factor: float = 0.02, repeats: int = 2):
+    from repro.core.executor import SiriusEngine
+    from repro.core.fallback import FallbackEngine
+    from repro.data.tpch import generate, load_into_engine
+    from repro.data.tpch_queries import QUERIES
+
+    db = generate(scale_factor)
+    eng = SiriusEngine()
+    t0 = time.perf_counter()
+    load_into_engine(eng, db)
+    cold_load_s = time.perf_counter() - t0
+    fb = FallbackEngine(db)
+
+    rows = []
+    for qid in sorted(QUERIES):
+        # hot run: first execution warms caches/compilations, then measure
+        eng.execute(QUERIES[qid]())
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.execute(QUERIES[qid]())
+        t_eng = (time.perf_counter() - t0) / repeats
+
+        fb.execute(QUERIES[qid]())
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fb.execute(QUERIES[qid]())
+        t_fb = (time.perf_counter() - t0) / repeats
+        rows.append((qid, t_eng, t_fb))
+
+    print(f"# tpch_single sf={scale_factor} cold_load_s={cold_load_s:.2f}")
+    print("name,us_per_call,derived")
+    for qid, t_eng, t_fb in rows:
+        print(f"tpch_q{qid}_engine,{t_eng*1e6:.0f},host_over_engine="
+              f"{t_fb/t_eng:.2f}x")
+        print(f"tpch_q{qid}_hostbaseline,{t_fb*1e6:.0f},")
+    tot_e = sum(r[1] for r in rows)
+    tot_f = sum(r[2] for r in rows)
+    geo = float(np.exp(np.mean([np.log(r[2] / r[1]) for r in rows])))
+    print(f"tpch_total_engine,{tot_e*1e6:.0f},total_ratio={tot_f/tot_e:.2f}x")
+    print(f"tpch_total_hostbaseline,{tot_f*1e6:.0f},geomean_ratio={geo:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Roofline analysis from dry-run artifacts (assignment §ROOFLINE).
+
+Per (arch × shape) on the single-pod 16x16 mesh:
+  compute term    = HLO_FLOPs_per_dev / peak_FLOP/s        (197 TF bf16, v5e)
+  memory term     = HLO_bytes_per_dev / HBM_bw             (819 GB/s)
+  collective term = collective_bytes_per_dev / link_bw     (~50 GB/s/link ICI)
+plus the dominant bottleneck, MODEL_FLOPS (6·N·D train / 2·N·D inference,
+N_active for MoE), and the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs ×
+chips) — which catches remat/redundancy waste.
+
+HLO_FLOPs are loop-corrected (XLA cost_analysis counts while bodies once;
+see launch/hlo_analysis.py) and are a matmul floor — elementwise FLOPs are
+excluded, so treat ratios >1 as exact-matmul accounting.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "16x16") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("status") == "ok":
+            out.append(r)
+    return out
+
+
+def terms(rec: dict) -> dict:
+    flops = rec["flops_per_device"]
+    byts = rec["bytes_accessed_per_device"]
+    coll = rec["collective_bytes_per_device"].get("total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    n = rec["n_chips"]
+    model_flops = None
+    useful = None
+    if "model_params" in rec:
+        kind = rec.get("kind", "train")
+        tokens = rec["global_batch"] * (rec["seq_len"]
+                                        if kind in ("train", "prefill") else 1)
+        n_active = rec.get("active_params") or rec["model_params"]
+        model_flops = (6.0 if kind == "train" else 2.0) * n_active * tokens
+        useful = model_flops / max(flops * n, 1.0)
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0], "bound_s": bound,
+        "model_flops": model_flops, "useful_ratio": useful,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+    }
+
+
+def table(mesh: str = "16x16") -> List[dict]:
+    rows = []
+    for rec in load_records(mesh):
+        t = terms(rec)
+        rows.append({"arch": rec["arch"], "shape": rec["shape"], **t,
+                     "fits": rec["memory"]["fits_16gb_v5e"],
+                     "resident_gib":
+                         rec["memory"]["resident_bytes_per_chip"] / 2**30})
+    return rows
+
+
+def run():
+    rows = table()
+    if not rows:
+        print("roofline_no_artifacts,0,run_python_-m_repro.launch.dryrun_--sweep")
+        return rows
+    print("name,us_per_call,derived")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "n/a"
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{r['bound_s']*1e6:.0f},"
+              f"dom={r['dominant']};comp_s={r['compute_s']:.4f};"
+              f"mem_s={r['memory_s']:.4f};coll_s={r['collective_s']:.4f};"
+              f"useful={ur};fits={r['fits']};"
+              f"frac={r['roofline_fraction']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  bench_tpch_single   Figure 4: single-node TPC-H, engine vs host baseline
+  bench_breakdown     Figure 5: per-operator breakdown
+  bench_distributed   Table 2: distributed Q1/Q3/Q6(+Q12), compute/exchange/other
+  bench_costmodel     Table 1/SS4.2: equal-rental-cost projection (labeled)
+  roofline            assignment SSRoofline: terms from dry-run artifacts
+  bench_kernels       Pallas kernel microbenches (interpret-mode, vs jnp ref)
+
+Prints ``name,us_per_call,derived`` CSV per section.
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n### {title} " + "#" * max(10, 60 - len(title)))
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    print("name,us_per_call,derived")
+
+    def timeit(fn, reps=3):
+        fn()  # warm/compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            r = fn()
+        import jax
+        jax.block_until_ready(r)
+        return (time.perf_counter() - t0) / reps
+
+    n = 200_000
+    g = jnp.asarray(rng.integers(0, 512, n))
+    v = jnp.asarray(rng.normal(size=(n, 1)).astype(np.float32))
+    t_k = timeit(lambda: ops.groupby_sum(g, v, 512))
+    t_r = timeit(lambda: ref.groupby_sum_ref(g, v, 512))
+    print(f"kernel_groupby_sum,{t_k*1e6:.0f},interpret_vs_ref={t_k/t_r:.1f}x")
+
+    cols = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    lo = jnp.array([-1.0, -1.0, -1.0], jnp.float32)
+    hi = jnp.array([1.0, 1.0, 1.0], jnp.float32)
+    t_k = timeit(lambda: ops.filter_mask_counts(cols, lo, hi))
+    t_r = timeit(lambda: ref.filter_mask_counts_ref(cols, lo, hi))
+    print(f"kernel_filter,{t_k*1e6:.0f},interpret_vs_ref={t_k/t_r:.1f}x")
+
+    bk = rng.choice(np.arange(4 * 50_000, dtype=np.int64), 50_000, False)
+    pk = rng.choice(bk, n)
+    b32, p32 = ops.factorize_keys_int32(bk, pk)
+    sk, sr, _ = ops.build_table32(jnp.asarray(b32))
+    pj = jnp.asarray(p32)
+    t_k = timeit(lambda: ops.hash_probe(pj, sk, sr))
+    t_r = timeit(lambda: ref.hash_probe_ref(pj, sk, sr))
+    print(f"kernel_hash_probe,{t_k*1e6:.0f},interpret_vs_ref={t_k/t_r:.1f}x")
+
+    b, h, kvh, d, s = 2, 8, 4, 64, 2048
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    lens = jnp.asarray([s, s // 2])
+    t_k = timeit(lambda: ops.decode_attention(q, k, vv, lens))
+    t_r = timeit(lambda: ref.decode_attention_ref(q, k, vv, lens))
+    print(f"kernel_decode_attn,{t_k*1e6:.0f},interpret_vs_ref={t_k/t_r:.1f}x")
+
+
+def main() -> None:
+    from . import (bench_breakdown, bench_costmodel, bench_distributed,
+                   bench_tpch_single, roofline)
+    sections = {
+        "tpch_single": lambda: bench_tpch_single.run(),
+        "breakdown": lambda: bench_breakdown.run(),
+        "distributed": lambda: bench_distributed.run(),
+        "costmodel": lambda: bench_costmodel.run(),
+        "roofline": lambda: roofline.run(),
+        "kernels": bench_kernels,
+    }
+    wanted = sys.argv[1:] or list(sections)
+    for name in wanted:
+        _section(name)
+        t0 = time.time()
+        try:
+            sections[name]()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_SECTION_FAILED,0,{type(e).__name__}:{e}")
+        print(f"# section {name} took {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

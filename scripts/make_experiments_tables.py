@@ -1,0 +1,94 @@
+"""Generate the §Dry-run and §Roofline markdown tables from artifacts.
+
+Usage: PYTHONPATH=src python scripts/make_experiments_tables.py
+Writes artifacts/roofline_table.md + artifacts/dryrun_table.md.
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW, terms  # noqa: E402
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts")
+
+
+def load(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun", "*.json"))):
+        r = json.load(open(p))
+        if r.get("mesh") == mesh:
+            out.append(r)
+    return out
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def main():
+    # -- roofline table (single-pod) ------------------------------------------
+    rows = []
+    for rec in load("16x16"):
+        if rec.get("status") != "ok":
+            rows.append((rec["arch"], rec["shape"], None, rec.get("error", "")))
+            continue
+        t = terms(rec)
+        rows.append((rec["arch"], rec["shape"], t, rec))
+
+    with open(os.path.join(ART, "roofline_table.md"), "w") as f:
+        f.write("| arch | shape | compute | memory | collective | dominant | "
+                "useful | roofline-frac | fits 16GB | resident/chip |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for arch, shape, t, rec in rows:
+            if t is None:
+                f.write(f"| {arch} | {shape} | FAILED | | | | | | | |\n")
+                continue
+            ur = f"{t['useful_ratio']:.2f}" if t["useful_ratio"] else "n/a"
+            gib = rec["memory"]["resident_bytes_per_chip"] / 2**30
+            f.write(f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+                    f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                    f"**{t['dominant']}** | {ur} | "
+                    f"{t['roofline_fraction']:.2f} | "
+                    f"{'✓' if rec['memory']['fits_16gb_v5e'] else '✗'} | "
+                    f"{gib:.1f} GiB |\n")
+
+    # -- dry-run status table (both meshes) ------------------------------------
+    with open(os.path.join(ART, "dryrun_table.md"), "w") as f:
+        f.write("| arch | shape | 16x16 | 2x16x16 | FLOPs/dev (16x16) | "
+                "coll B/dev | compile s |\n|---|---|---|---|---|---|---|\n")
+        single = {(r["arch"], r["shape"]): r for r in load("16x16")}
+        multi = {(r["arch"], r["shape"]): r for r in load("2x16x16")}
+        for key in sorted(set(single) | set(multi)):
+            s = single.get(key)
+            m = multi.get(key)
+
+            def st(r):
+                if r is None:
+                    return "—"
+                return "OK" if r["status"] == "ok" else "FAIL"
+
+            fl = f"{s['flops_per_device']:.2e}" if s and s["status"] == "ok" \
+                else ""
+            cb = (f"{s['collective_bytes_per_device']['total']:.2e}"
+                  if s and s.get("status") == "ok" else "")
+            ct = f"{s.get('compile_time_s', '')}" if s else ""
+            f.write(f"| {key[0]} | {key[1]} | {st(s)} | {st(m)} | {fl} | "
+                    f"{cb} | {ct} |\n")
+
+    n_ok_s = sum(1 for r in load("16x16") if r["status"] == "ok")
+    n_ok_m = sum(1 for r in load("2x16x16") if r["status"] == "ok")
+    print(f"tables written; ok cells: 16x16={n_ok_s} 2x16x16={n_ok_m}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned architecture configs (+ the paper's own sirius-tpch workload)."""
+from .base import (  # noqa: F401
+    ArchConfig, LM_SHAPES, MambaCfg, MLACfg, MoECfg, Shape, all_configs,
+    get_config, reduced, register,
+)

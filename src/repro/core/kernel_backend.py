@@ -1,0 +1,135 @@
+"""Swappable operator backend: route eligible operators to Pallas kernels.
+
+Sirius's modular design lets developers switch operator implementations
+between libcudf and custom CUDA kernels (§3.2.2).  The analogue here: the
+executor consults this backend first; when an operator instance matches a
+kernel's contract it runs on the Pallas path, otherwise it falls through to
+the generic jnp implementation.  Enabled via ``SiriusEngine(use_kernels=True)``.
+
+Eligibility contracts:
+  * filter  — conjunction of closed/open range predicates over numeric/date
+              columns (Q1/Q6/Q19-style hot filters) → fused filter kernel.
+  * probe   — single-column integer PK-FK inner/semi/anti/mark join →
+              int32-factorized open-addressing probe kernel.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from ..relational.expressions import Between, BinOp, Col, Expr, Lit
+from ..relational.table import DATE, NUMERIC, Column, Table
+
+
+def _collect_range_conjuncts(e: Expr, out: List[Tuple[str, float, float]]) -> bool:
+    """Flatten an AND tree of range predicates; False if any leaf is foreign."""
+    if isinstance(e, BinOp) and e.op == "and":
+        return (_collect_range_conjuncts(e.left, out)
+                and _collect_range_conjuncts(e.right, out))
+    if isinstance(e, Between) and isinstance(e.operand, Col) \
+            and isinstance(e.lo, Lit) and isinstance(e.hi, Lit):
+        out.append((e.operand.name, float(e.lo.value), float(e.hi.value)))
+        return True
+    if isinstance(e, BinOp) and isinstance(e.left, Col) and isinstance(e.right, Lit):
+        v = e.right.value
+        if isinstance(v, str):
+            return False
+        v = float(v)
+        if e.right.kind == DATE:   # int day counts: exact ±1 steps
+            below = v - 1.0
+            above = v + 1.0
+        else:                      # f32 lattice neighbours for strict bounds
+            below = float(np.nextafter(np.float32(v), np.float32(-np.inf)))
+            above = float(np.nextafter(np.float32(v), np.float32(np.inf)))
+        if e.op == "<":
+            out.append((e.left.name, -np.inf, below))
+        elif e.op == "<=":
+            out.append((e.left.name, -np.inf, v))
+        elif e.op == ">":
+            out.append((e.left.name, above, np.inf))
+        elif e.op == ">=":
+            out.append((e.left.name, v, np.inf))
+        elif e.op == "==":
+            out.append((e.left.name, v, v))
+        else:
+            return False
+        return True
+    return False
+
+
+class KernelBackend:
+    """Tracks usage so tests/benchmarks can assert the kernel path fired."""
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+        self.filter_hits = 0
+        self.probe_hits = 0
+
+    # -- fused range filter ---------------------------------------------------
+    def try_filter(self, cond: Expr, t: Table) -> Optional[Table]:
+        conjuncts: List[Tuple[str, float, float]] = []
+        if not _collect_range_conjuncts(cond, conjuncts) or not conjuncts:
+            return None
+        cols = []
+        for name, _, _ in conjuncts:
+            if name not in t:
+                return None
+            c = t[name]
+            if c.kind not in (NUMERIC, DATE):
+                return None
+            data = np.asarray(c.data)
+            if data.dtype.kind == "f":
+                # f32 lanes: only exact below 2^24 — money columns are fine at
+                # bench scale; bail out beyond to preserve exactness
+                if np.abs(data).max(initial=0.0) >= 2**24:
+                    return None
+            elif np.abs(data).max(initial=0) >= 2**24:
+                return None
+            cols.append(data.astype(np.float32))
+        mat = jnp.asarray(np.stack(cols, axis=1))
+        lo = jnp.asarray([c[1] for c in conjuncts], jnp.float32)
+        hi = jnp.asarray([c[2] for c in conjuncts], jnp.float32)
+        idx, count = kops.filter_select(mat, lo, hi, interpret=self.interpret)
+        self.filter_hits += 1
+        return t.take(idx[: int(count)])
+
+    # -- hash-probe join --------------------------------------------------------
+    def try_probe(self, probe: Table, build: Table, probe_keys, build_keys,
+                  how: str) -> Optional[Table]:
+        if len(probe_keys) != 1 or how not in ("inner", "semi", "anti", "mark"):
+            return None
+        pc, bc = probe[probe_keys[0]], build[build_keys[0]]
+        if pc.kind != NUMERIC or bc.kind != NUMERIC:
+            return None
+        bk = np.asarray(bc.data)
+        pk = np.asarray(pc.data)
+        if bk.dtype.kind not in "iu" or pk.dtype.kind not in "iu":
+            return None
+        if len(np.unique(bk)) != len(bk):   # kernel contract: unique build keys
+            return None
+        b32, p32 = kops.factorize_keys_int32(bk.astype(np.int64),
+                                             pk.astype(np.int64))
+        sk, sr, placed = kops.build_table32(jnp.asarray(b32))
+        if not bool(placed):
+            return None
+        row, found = kops.hash_probe(jnp.asarray(p32), sk, sr,
+                                     interpret=self.interpret)
+        self.probe_hits += 1
+        found_np = np.asarray(found)
+        if how == "mark":
+            return probe.with_column("__mark", Column(jnp.asarray(found_np), "bool"))
+        if how == "semi":
+            return probe.take(jnp.asarray(np.nonzero(found_np)[0]))
+        if how == "anti":
+            return probe.take(jnp.asarray(np.nonzero(~found_np)[0]))
+        # inner: gather matched probe rows + matched build rows
+        sel = np.nonzero(found_np)[0]
+        out = {n: c.take(jnp.asarray(sel)) for n, c in probe.columns.items()}
+        bidx = np.asarray(row)[sel]
+        for n, c in build.columns.items():
+            if n not in out:
+                out[n] = c.take(jnp.asarray(bidx))
+        return Table(out)

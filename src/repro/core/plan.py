@@ -1,0 +1,205 @@
+"""Substrait-like query plan IR (the drop-in boundary of the paper, §3.1-3.2).
+
+The host database layer (our mini SQL frontend, or hand-built TPC-H plans
+standing in for DuckDB's optimizer output) produces this IR; the execution
+engine consumes it.  Like Substrait, the IR is a tree of relational operators
+with embedded scalar expressions and is JSON-round-trippable, so a plan can
+cross a process/system boundary — that is what makes Sirius "drop-in".
+
+Node vocabulary mirrors Substrait relations: ReadRel, FilterRel, ProjectRel,
+JoinRel, AggregateRel, SortRel, FetchRel (limit), ExchangeRel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..relational.aggregate import AggSpec
+from ..relational.expressions import (
+    Between, BinOp, Case, Cast, Col, Expr, ExtractYear, InList, Like, Lit,
+    Substr, UnOp,
+)
+from ..relational.sort import SortKey
+
+
+class Rel:
+    """Base class for plan nodes."""
+
+    def inputs(self) -> List["Rel"]:
+        out = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, Rel):
+                out.append(v)
+        return out
+
+
+@dataclasses.dataclass
+class ReadRel(Rel):
+    table: str
+    columns: Optional[List[str]] = None           # projection pushdown
+    filter: Optional[Expr] = None                 # predicate pushdown
+
+
+@dataclasses.dataclass
+class FilterRel(Rel):
+    input: Rel
+    condition: Expr
+
+
+@dataclasses.dataclass
+class ProjectRel(Rel):
+    input: Rel
+    exprs: List[Tuple[str, Expr]]                 # (output name, expression)
+    keep_input: bool = False                      # append instead of replace
+
+
+@dataclasses.dataclass
+class JoinRel(Rel):
+    """probe ⋈ build.  ``build`` is the pipeline breaker side (paper §3.2.2)."""
+    probe: Rel
+    build: Rel
+    probe_keys: List[str]
+    build_keys: List[str]
+    how: str = "inner"                            # inner|left|semi|anti|mark
+    mark_name: str = "__mark"
+    post_filter: Optional[Expr] = None            # non-equi residual predicate
+
+
+@dataclasses.dataclass
+class AggregateRel(Rel):
+    input: Rel
+    group_keys: List[str]
+    aggs: List[AggSpec]
+    having: Optional[Expr] = None
+
+
+@dataclasses.dataclass
+class SortRel(Rel):
+    input: Rel
+    keys: List[SortKey]
+    limit: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FetchRel(Rel):
+    input: Rel
+    count: int
+
+
+@dataclasses.dataclass
+class ExchangeRel(Rel):
+    """Exchange as a dedicated physical operator (paper §3.2.4)."""
+    input: Rel
+    kind: str                                     # shuffle|broadcast|merge|multicast
+    keys: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ScalarSubquery(Expr):
+    """Uncorrelated scalar subquery — executed first, bound as a literal.
+
+    DuckDB's optimizer does the same materialization before the plan reaches
+    Sirius; we keep the node so plans stay single-tree and serializable.
+    """
+    plan: Rel
+    column: str
+
+    def __hash__(self):
+        return id(self)
+
+
+# ---------------------------------------------------------------------------
+# JSON serialization (the "Substrait wire format" of this repro)
+# ---------------------------------------------------------------------------
+
+_EXPR_TYPES = {c.__name__: c for c in
+               (Col, Lit, BinOp, UnOp, Between, InList, Like, Case,
+                ExtractYear, Substr, Cast)}
+_REL_TYPES = {c.__name__: c for c in
+              (ReadRel, FilterRel, ProjectRel, JoinRel, AggregateRel, SortRel,
+               FetchRel, ExchangeRel)}
+
+
+def _enc(obj: Any) -> Any:
+    if isinstance(obj, ScalarSubquery):
+        return {"@expr": "ScalarSubquery", "plan": _enc(obj.plan), "column": obj.column}
+    if isinstance(obj, Expr):
+        d = {"@expr": type(obj).__name__}
+        for f in dataclasses.fields(obj):
+            d[f.name] = _enc(getattr(obj, f.name))
+        return d
+    if isinstance(obj, Rel):
+        d = {"@rel": type(obj).__name__}
+        for f in dataclasses.fields(obj):
+            d[f.name] = _enc(getattr(obj, f.name))
+        return d
+    if isinstance(obj, AggSpec):
+        return {"@agg": True, "fn": obj.fn, "expr": _enc(obj.expr), "name": obj.name}
+    if isinstance(obj, SortKey):
+        return {"@sortkey": True, "name": obj.name, "ascending": obj.ascending}
+    if isinstance(obj, (list, tuple)):
+        return [_enc(x) for x in obj]
+    return obj
+
+
+def _dec(d: Any) -> Any:
+    if isinstance(d, list):
+        return [_dec(x) for x in d]
+    if not isinstance(d, dict):
+        return d
+    if "@expr" in d:
+        name = d.pop("@expr")
+        if name == "ScalarSubquery":
+            return ScalarSubquery(_dec(d["plan"]), d["column"])
+        cls = _EXPR_TYPES[name]
+        kwargs = {k: _dec(v) for k, v in d.items()}
+        if name in ("Case",):
+            kwargs["whens"] = [tuple(w) for w in kwargs["whens"]]
+        return cls(**kwargs)
+    if "@rel" in d:
+        name = d.pop("@rel")
+        cls = _REL_TYPES[name]
+        kwargs = {k: _dec(v) for k, v in d.items()}
+        if name == "ProjectRel":
+            kwargs["exprs"] = [tuple(e) for e in kwargs["exprs"]]
+        return cls(**kwargs)
+    if d.get("@agg"):
+        return AggSpec(d["fn"], _dec(d["expr"]), d["name"])
+    if d.get("@sortkey"):
+        return SortKey(d["name"], d["ascending"])
+    return d
+
+
+def plan_to_json(plan: Rel) -> str:
+    return json.dumps(_enc(plan))
+
+
+def plan_from_json(s: str) -> Rel:
+    return _dec(json.loads(s))
+
+
+def walk(plan: Rel):
+    """Pre-order traversal."""
+    yield plan
+    for child in plan.inputs():
+        yield from walk(child)
+
+
+def explain(plan: Rel, indent: int = 0) -> str:
+    pad = "  " * indent
+    name = type(plan).__name__
+    extra = ""
+    if isinstance(plan, ReadRel):
+        extra = f" {plan.table}" + (f" filter={plan.filter!r}" if plan.filter else "")
+    elif isinstance(plan, JoinRel):
+        extra = f" {plan.how} on {plan.probe_keys}={plan.build_keys}"
+    elif isinstance(plan, AggregateRel):
+        extra = f" by {plan.group_keys} aggs={[a.name for a in plan.aggs]}"
+    elif isinstance(plan, ExchangeRel):
+        extra = f" {plan.kind} keys={plan.keys}"
+    lines = [f"{pad}{name}{extra}"]
+    for child in plan.inputs():
+        lines.append(explain(child, indent + 1))
+    return "\n".join(lines)

@@ -1,0 +1,104 @@
+"""Static-shape relational operators for compiled fragments.
+
+These run inside jit / shard_map (the distributed path and the multi-pod
+dry-run), so every shape is fixed: row counts are carried by validity masks,
+joins probe fixed-capacity hash tables, and aggregation is sort-based within
+the shard (the TPU-native substitute for dynamic hash tables — argsort +
+segment boundaries + segment_sum, all dense vector ops).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..exchange.service import Frame
+from ..relational.join import StaticHashTable
+
+I64_MAX = jnp.iinfo(jnp.int64).max
+
+
+def pack_keys(cols: Sequence[jnp.ndarray], cards: Sequence[int]) -> jnp.ndarray:
+    """Pack dense non-negative int key columns into one int64 (static cards)."""
+    out = cols[0].astype(jnp.int64)
+    for c, card in zip(cols[1:], cards[1:]):
+        out = out * card + c.astype(jnp.int64)
+    return out
+
+
+def local_sort_agg(frame: Frame, key: jnp.ndarray,
+                   sums: Dict[str, jnp.ndarray],
+                   firsts: Dict[str, jnp.ndarray] | None = None
+                   ) -> Tuple[Frame, jnp.ndarray]:
+    """Shard-local group-by: sort rows by key, segment-reduce runs.
+
+    ``sums``   name -> per-row value to sum within each key group
+    ``firsts`` name -> per-row value carried through (same for all rows of a
+               key, e.g. o_orderdate for key o_orderkey)
+    Returns (Frame with 'key', sums, firsts, and '__count'; valid marks the
+    unique keys), plus the sorted key array (for debugging).
+    """
+    cap = frame.capacity
+    skey = jnp.where(frame.valid, key.astype(jnp.int64), I64_MAX)
+    order = jnp.argsort(skey)
+    k_sorted = jnp.take(skey, order)
+    v_sorted = jnp.take(frame.valid, order)
+
+    is_start = jnp.concatenate([
+        jnp.ones((1,), bool), k_sorted[1:] != k_sorted[:-1]]) & v_sorted
+    gid = jnp.cumsum(is_start) - 1                     # segment id per row
+    gid = jnp.where(v_sorted, gid, cap)                # invalid rows dumped
+
+    out_cols: Dict[str, jnp.ndarray] = {}
+    ones = v_sorted.astype(jnp.float64)
+    out_cols["__count"] = jax.ops.segment_sum(ones, gid, cap + 1)[:-1]
+    for name, vals in sums.items():
+        vs = jnp.take(vals, order).astype(jnp.float64)
+        vs = jnp.where(v_sorted, vs, 0.0)
+        out_cols[name] = jax.ops.segment_sum(vs, gid, cap + 1)[:-1]
+    out_key = jnp.full((cap + 1,), I64_MAX, jnp.int64).at[gid].set(
+        k_sorted, mode="drop")[:-1]
+    out_cols["key"] = out_key
+    if firsts:
+        for name, vals in firsts.items():
+            vs = jnp.take(vals, order)
+            buf = jnp.zeros((cap + 1,), vs.dtype).at[gid].set(vs, mode="drop")
+            out_cols[name] = buf[:-1]
+    out_valid = out_key != I64_MAX
+    return Frame(out_cols, out_valid), k_sorted
+
+
+def static_semi_join(frame: Frame, key: jnp.ndarray, build_keys: jnp.ndarray,
+                     build_valid: jnp.ndarray, anti: bool = False) -> Frame:
+    """Filter frame rows by membership of ``key`` in the build key set."""
+    safe = jnp.where(build_valid, build_keys.astype(jnp.int64), -1)
+    ht = StaticHashTable.build(safe, valid=build_valid)
+    _, found = ht.lookup(key.astype(jnp.int64))
+    keep = ~found if anti else found
+    return frame.with_mask(keep)
+
+
+def static_inner_join(probe: Frame, probe_key: jnp.ndarray, build: Frame,
+                      build_key: jnp.ndarray) -> Frame:
+    """PK-FK inner join: build side unique keys; output rows = probe rows."""
+    safe = jnp.where(build.valid, build_key.astype(jnp.int64), -1)
+    ht = StaticHashTable.build(safe, valid=build.valid)
+    row, found = ht.lookup(probe_key.astype(jnp.int64))
+    safe_row = jnp.clip(row, 0, None)
+    cols = dict(probe.columns)
+    for name, col in build.columns.items():
+        if name not in cols:
+            cols[name] = jnp.take(col, safe_row, axis=0)
+    return Frame(cols, probe.valid & found)
+
+
+def static_topk(frame: Frame, score: jnp.ndarray, k: int,
+                descending: bool = True) -> Frame:
+    """Keep the k best rows by score (masked)."""
+    s = score.astype(jnp.float64)
+    neg_inf = jnp.finfo(jnp.float64).min
+    masked = jnp.where(frame.valid, s if descending else -s, neg_inf)
+    _, idx = jax.lax.top_k(masked, k)
+    taken_valid = jnp.take(frame.valid, idx)
+    return frame.take(idx, taken_valid)

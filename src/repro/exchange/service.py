@@ -1,0 +1,177 @@
+"""Exchange service layer (paper §3.2.4) on jax.lax collectives.
+
+Exchange is modeled as dedicated physical operators — broadcast, shuffle,
+merge, multicast — NCCL primitives in the paper, `shard_map` + `jax.lax`
+collectives here (the TPU ICI schedule the roofline analysis reads).
+
+Everything operates on **static-shape shard frames**: per-shard fixed-capacity
+column arrays plus a validity mask (the TPU adaptation of dynamic row counts,
+DESIGN.md §2).  These helpers are called *inside* a shard_map region; the
+distributed executor owns the shard_map wrapper so whole fragments lower to
+one XLA program (scan→filter→join→exchange→agg fuse into a single compiled
+fragment — the paper's pipeline, compiled).
+
+Overflow contract: shuffles write into fixed receive buckets; an overflow
+counter is returned and checked by the coordinator (real engines size exchange
+buffers the same way and repartition on overflow).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MIX64 = -7046029254386353131  # golden-ratio mix
+
+
+@dataclasses.dataclass
+class Frame:
+    """Per-shard static-capacity columnar batch (used inside shard_map)."""
+
+    columns: Dict[str, jnp.ndarray]   # each (cap, ...) — row-major leading dim
+    valid: jnp.ndarray                # (cap,) bool
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def count(self) -> jnp.ndarray:
+        return self.valid.sum()
+
+    def with_mask(self, mask: jnp.ndarray) -> "Frame":
+        return Frame(self.columns, self.valid & mask)
+
+    def select(self, names) -> "Frame":
+        return Frame({n: self.columns[n] for n in names}, self.valid)
+
+    def with_columns(self, **cols) -> "Frame":
+        out = dict(self.columns)
+        out.update(cols)
+        return Frame(out, self.valid)
+
+    def take(self, idx: jnp.ndarray, taken_valid: jnp.ndarray) -> "Frame":
+        return Frame({n: jnp.take(c, idx, axis=0)
+                      for n, c in self.columns.items()}, taken_valid)
+
+
+def partition_hash(keys: jnp.ndarray, n_parts: int) -> jnp.ndarray:
+    h = keys.astype(jnp.int64) * MIX64
+    h = (h >> 33) ^ h
+    return (h % n_parts + n_parts).astype(jnp.int32) % n_parts
+
+
+# ---------------------------------------------------------------------------
+# exchange operators (call inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def shuffle(frame: Frame, keys: jnp.ndarray, axis: str, out_cap: int
+            ) -> Tuple[Frame, jnp.ndarray]:
+    """Hash-repartition rows by ``keys`` across the ``axis`` shards."""
+    n = jax.lax.axis_size(axis)
+    dest = jnp.where(frame.valid, partition_hash(keys, n), n)
+    return shuffle_by_dest(frame, dest, axis, out_cap)
+
+
+def shuffle_hierarchical(frame: Frame, key_name: str, pod_axis: str,
+                         data_axis: str, out_cap_pod: int, out_cap_data: int):
+    """Pod-aware two-stage shuffle (beyond-paper, DESIGN.md §7).
+
+    Rows first cross the inter-pod links bucketed by destination pod (few,
+    large messages over the slow axis), then fan out intra-pod — cutting the
+    per-link byte volume on the cross-pod dimension versus a flat all_to_all
+    over pod×data shards.  ``key_name`` must be a frame column so the second
+    stage can re-derive destinations after the first exchange.
+    """
+    p = jax.lax.axis_size(pod_axis)
+    d = jax.lax.axis_size(data_axis)
+    g = partition_hash(frame.columns[key_name], p * d)
+    fr, ov1 = shuffle_by_dest(frame, g // d, pod_axis, out_cap_pod)
+    g2 = partition_hash(fr.columns[key_name], p * d) % d
+    fr2, ov2 = shuffle_by_dest(fr, g2, data_axis, out_cap_data)
+    return fr2, ov1 + ov2
+
+
+def shuffle_by_dest(frame: Frame, dest: jnp.ndarray, axis: str, out_cap: int
+                    ) -> Tuple[Frame, jnp.ndarray]:
+    """Repartition rows to explicit destinations over ``axis``.
+
+    Per shard: rows are grouped by destination (stable argsort — the TPU
+    compaction idiom), packed into (n_shards, out_cap) send buckets, exchanged
+    with one `all_to_all`, and flattened into a (n_shards*out_cap,) frame.
+    Returns (received frame, overflow count).  Invalid rows must carry
+    dest >= n.
+    """
+    n = jax.lax.axis_size(axis)
+    cap = frame.capacity
+    dest = jnp.where(frame.valid, dest, n)
+
+    order = jnp.argsort(dest, stable=True)           # group rows by destination
+    dest_sorted = jnp.take(dest, order)
+    # position of each row within its destination group
+    start = jnp.searchsorted(dest_sorted, jnp.arange(n + 1))
+    pos_in_group = jnp.arange(cap) - jnp.take(start, dest_sorted)
+    counts = start[1:] - start[:-1]                  # rows per destination (n+1 grp)
+    overflow = jnp.maximum(counts[:n] - out_cap, 0).sum()
+
+    in_bucket = (dest_sorted < n) & (pos_in_group < out_cap)
+    slot = jnp.where(in_bucket, dest_sorted * out_cap + pos_in_group,
+                     n * out_cap)                    # dumped past the end
+
+    def scatter(col):
+        src = jnp.take(col, order, axis=0)
+        buf_shape = (n * out_cap + 1,) + col.shape[1:]
+        buf = jnp.zeros(buf_shape, col.dtype).at[slot].set(
+            src, mode="drop")
+        return buf[:-1].reshape((n, out_cap) + col.shape[1:])
+
+    sent_valid = jnp.zeros((n * out_cap + 1,), bool).at[slot].set(
+        in_bucket, mode="drop")[:-1].reshape(n, out_cap)
+
+    def exchange(buf):
+        r = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                               tiled=False)
+        return r.reshape((n * out_cap,) + r.shape[2:])
+
+    recv_valid = exchange(sent_valid)
+    recv_cols = {name: exchange(scatter(col))
+                 for name, col in frame.columns.items()}
+    return Frame(recv_cols, recv_valid), jax.lax.psum(overflow, axis)
+
+
+def broadcast(frame: Frame, axis: str) -> Frame:
+    """All shards receive every shard's rows (build-side replication)."""
+    n = jax.lax.axis_size(axis)
+    cap = frame.capacity
+    cols = {name: jax.lax.all_gather(col, axis, tiled=True)
+            for name, col in frame.columns.items()}
+    valid = jax.lax.all_gather(frame.valid, axis, tiled=True)
+    return Frame(cols, valid)
+
+
+def merge(frame: Frame, axis: str) -> Frame:
+    """Gather all rows everywhere; the coordinator reads shard 0's copy.
+
+    (With jax collectives a true root-only gather is an all_gather whose
+    result is discarded on non-roots; XLA DCEs the unused copies.)
+    """
+    return broadcast(frame, axis)
+
+
+def multicast(frame: Frame, axis: str, group_size: int) -> Frame:
+    """Replicate rows within disjoint shard groups (paper's multi-cast)."""
+    idx = jax.lax.axis_index(axis)
+    n = jax.lax.axis_size(axis)
+    full = broadcast(frame, axis)
+    cap = frame.capacity
+    group = idx // group_size
+    member_ids = group * group_size + jnp.arange(group_size)
+    mask = jnp.zeros((n,), bool).at[member_ids].set(True)
+    keep = jnp.repeat(mask, cap, total_repeat_length=n * cap)
+    return Frame(full.columns, full.valid & keep)
+
+
+def all_reduce_sum(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    return jax.lax.psum(x, axis)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: flash-decode attention (single-token GQA decode).
+
+Serving-side hot spot for the LM architecture suite (decode_32k / long_500k
+shapes): one query token attends over a long KV cache.  The cache streams
+HBM→VMEM in blocks; an online-softmax accumulator (running max / sum / value
+accumulation) lives in VMEM scratch across the sequential grid — the TPU
+analogue of flash-decoding's split-K reduction, with the cross-block combine
+done by the sequential grid instead of a second kernel launch.
+
+Shapes (per batch element, handled by vmap in ops.py):
+  q        (H, D)          H = n_q_heads
+  k, v     (S, KVH, D)     S padded to BLK multiple; GQA via head grouping
+  length   scalar int32    valid cache length (masks the tail)
+  out      (H, D)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLK = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, blk: int, groups: int, scale: float):
+    s = pl.program_id(0)
+    n_steps = pl.num_programs(0)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                                # (H, D)
+    k = k_ref[...]                                # (BLK, KVH, D)
+    v = v_ref[...]
+    kvh = k.shape[1]
+    d = q.shape[-1]
+    qg = q.reshape(kvh, groups, d)
+
+    # scores: (KVH, G, BLK)
+    scores = jnp.einsum("kgd,skd->kgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = s * blk + jax.lax.broadcasted_iota(jnp.int32, (kvh, groups, blk), 2)
+    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)
+
+    m_prev = m_ref[...]                           # (KVH, G)
+    m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(scores - m_cur[..., None])        # (KVH, G, BLK)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(s == n_steps - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...][..., None]).reshape(
+            kvh * groups, d).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, interpret: bool = True):
+    """Batched flash decode via vmap: q (B,H,D), k/v (B,S,KVH,D), lengths (B,)."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k.shape
+    groups = h // kvh
+    s_pad = ((s + BLK - 1) // BLK) * BLK
+    k_p = jnp.zeros((b, s_pad, kvh, d), k.dtype).at[:, :s].set(k)
+    v_p = jnp.zeros((b, s_pad, kvh, d), v.dtype).at[:, :s].set(v)
+    scale = 1.0 / (d ** 0.5)
+
+    call = pl.pallas_call(
+        functools.partial(_kernel, blk=BLK, groups=groups, scale=scale),
+        grid=(s_pad // BLK,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLK, kvh, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLK, kvh, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, groups), jnp.float32),      # running max
+            pltpu.VMEM((kvh, groups), jnp.float32),      # running sum
+            pltpu.VMEM((kvh, groups, d), jnp.float32),   # value acc
+        ],
+        interpret=interpret,
+    )
+    lengths32 = lengths.astype(jnp.int32).reshape(b, 1)
+    return jax.vmap(call)(lengths32, q, k_p, v_p)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused multi-column range-predicate filter.
+
+The GPU hot path the paper identifies for filter-heavy queries (Q6/Q19) is a
+chain of libcudf calls, each materializing a boolean column in HBM.  The TPU
+adaptation fuses the whole conjunction into one VMEM pass: C columns stream
+through the VPU, the mask and per-tile selected counts come out in a single
+kernel — one read of the data instead of C+1.
+
+Compaction itself (dynamic output size) is done by the ops.py wrapper at the
+XLA level (argsort of ~mask — the TPU-idiomatic compaction; GPU engines use
+warp-ballot + prefix-sum which has no TPU analogue, see DESIGN.md).
+
+Predicate form: AND over columns of (lo_c <= x_c <= hi_c).  Equality is
+lo == hi; one-sided ranges pass ±inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+
+
+def _kernel(cols_ref, lo_ref, hi_ref, mask_ref, count_ref):
+    x = cols_ref[...]                      # (TILE, C)
+    lo = lo_ref[...]                       # (1, C)
+    hi = hi_ref[...]
+    m = jnp.all((x >= lo) & (x <= hi), axis=1)   # (TILE,)
+    mask_ref[...] = m
+    count_ref[0] = jnp.sum(m.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def filter_mask_counts(cols: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                       interpret: bool = True):
+    """cols (N, C) f32, lo/hi (C,) → (mask bool[N], per-tile counts)."""
+    n, c = cols.shape
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    cols_p = jnp.full((n_pad, c), jnp.float32(jnp.inf)).at[:n].set(
+        cols.astype(jnp.float32))
+    mask, counts = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_pad // TILE,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cols_p, lo.astype(jnp.float32)[None, :], hi.astype(jnp.float32)[None, :])
+    return mask[:n], counts

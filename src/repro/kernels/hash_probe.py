@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: hash-join probe.
+
+The paper's dominant operator (Fig. 5): probing a build-side hash table.
+cuDF probes with CAS-free reads but thread-per-row control flow; the TPU
+adaptation keeps the whole open-addressing table resident in VMEM (it is the
+hot, reused structure) and probes a tile of keys per grid step with
+fixed-round vectorized linear probing — every round is a dense VMEM gather +
+compare across the tile, no per-row branching.
+
+Table layout: capacity a power of two; `slots_key[i]` int32 key or -1,
+`slots_row[i]` build row or -1.  Probe chains terminate at an empty slot
+(guaranteed by the deterministic multi-round scatter build, see
+relational/join.py).  Keys are int32 — the ops wrapper re-factorizes wider
+keys into partition-local int32 space before calling in (documented TPU
+adaptation: 32-bit lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+MIX32 = -1640531527  # 0x9E3779B9 golden-ratio mix, 32-bit (python int: pallas
+                     # kernels must not capture device constants)
+
+
+def _hash(keys: jnp.ndarray, mask: int) -> jnp.ndarray:
+    h = keys * jnp.int32(MIX32)
+    h = h ^ (h >> 15)
+    return h & mask
+
+
+def build_table32(keys32: jnp.ndarray, capacity: int | None = None,
+                  max_probes: int = 32):
+    """Build the open-addressing table the kernel probes (32-bit hash).
+
+    Same deterministic multi-round masked-scatter as
+    relational.join.StaticHashTable.build but over the kernel's hash
+    function, so build and probe walk identical chains.
+    Returns (slots_key int32, slots_row int32, all_placed bool).
+    """
+    n = keys32.shape[0]
+    cap = capacity or (1 << max(int(2 * n - 1).bit_length(), 4))
+    mask = cap - 1
+    keys32 = keys32.astype(jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    h0 = _hash(keys32, mask)
+
+    def round_body(i, state):
+        slots_row, placed = state
+        cand = ((h0 + i) & mask).astype(jnp.int32)
+        attempt = jnp.where(placed, -1, rows)
+        bids = jnp.full((cap,), -1, jnp.int32).at[cand].max(attempt)
+        empty = slots_row == -1
+        slots_row = jnp.where(empty & (bids >= 0), bids, slots_row)
+        won = (~placed) & (slots_row[cand] == rows)
+        placed = placed | won
+        return slots_row, placed
+
+    slots_row = jnp.full((cap,), -1, jnp.int32)
+    placed = jnp.zeros((n,), bool)
+    slots_row, placed = jax.lax.fori_loop(0, max_probes, round_body,
+                                          (slots_row, placed))
+    slots_key = jnp.where(slots_row >= 0,
+                          keys32[jnp.clip(slots_row, 0, n - 1)],
+                          jnp.int32(-1))
+    return slots_key, slots_row, jnp.all(placed)
+
+
+def _kernel(probe_ref, slots_key_ref, slots_row_ref, row_ref, found_ref,
+            *, capacity: int, max_probes: int):
+    keys = probe_ref[...]                          # (TILE,)
+    mask = capacity - 1
+    h0 = _hash(keys, mask)
+
+    def body(i, state):
+        row, done = state
+        cand = (h0 + i) & mask
+        k = jnp.take(slots_key_ref[...], cand)
+        r = jnp.take(slots_row_ref[...], cand)
+        hit = (~done) & (k == keys) & (r >= 0)
+        empty = (~done) & (r == -1)
+        row = jnp.where(hit, r, row)
+        done = done | hit | empty
+        return row, done
+
+    row = jnp.full((TILE,), -1, jnp.int32)
+    done = jnp.zeros((TILE,), jnp.bool_)
+    row, done = jax.lax.fori_loop(0, max_probes, body, (row, done))
+    row_ref[...] = row
+    found_ref[...] = row >= 0
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "interpret"))
+def hash_probe(probe_keys: jnp.ndarray, slots_key: jnp.ndarray,
+               slots_row: jnp.ndarray, max_probes: int = 32,
+               interpret: bool = True):
+    """Probe int32 keys against a VMEM-resident table → (row idx, found)."""
+    n = probe_keys.shape[0]
+    cap = slots_key.shape[0]
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    probe_p = jnp.full((n_pad,), -2, jnp.int32).at[:n].set(
+        probe_keys.astype(jnp.int32))
+    row, found = pl.pallas_call(
+        functools.partial(_kernel, capacity=cap, max_probes=max_probes),
+        grid=(n_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),   # whole table in VMEM
+            pl.BlockSpec((cap,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(probe_p, slots_key.astype(jnp.int32), slots_row.astype(jnp.int32))
+    return row[:n], found[:n]

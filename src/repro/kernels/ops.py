@@ -1,0 +1,91 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret mode
+executes the kernel body exactly).  On real TPU deployments pass
+``interpret=False`` — the pallas_call lowering path is identical.
+
+The wrappers own the TPU-adaptation glue documented in DESIGN.md:
+  * ``compact``            — argsort-based compaction (the TPU answer to
+                             warp-ballot compaction; stable, vectorizes).
+  * ``hash_probe_int64``   — re-factorizes int64 packed keys into the int32
+                             lane width the kernel wants.
+  * ``groupby_sum_large``  — partitions group space when G exceeds the VMEM
+                             accumulator budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .decode_attention import decode_attention
+from .filter_count import filter_mask_counts
+from .groupby_agg import groupby_sum
+from .hash_probe import build_table32, hash_probe
+
+__all__ = [
+    "build_table32", "compact", "decode_attention", "factorize_keys_int32",
+    "filter_mask_counts", "filter_select", "groupby_sum", "groupby_sum_large",
+    "hash_probe", "hash_probe_int64",
+]
+
+_GROUP_BUDGET = 4096  # VMEM accumulator rows per kernel call
+
+
+def compact(mask: jnp.ndarray):
+    """Selection-vector compaction: indices of True, selected-first order.
+
+    Static output size (= len(mask)); count tells how many lead entries are
+    valid.  Stable argsort of ~mask — pure XLA, fuses with the gather that
+    consumes it.
+    """
+    order = jnp.argsort(~mask, stable=True)
+    count = mask.sum()
+    return order, count
+
+
+def filter_select(cols: jnp.ndarray, lo, hi, interpret: bool = True):
+    """Fused range filter + compaction → (row indices, count)."""
+    mask, _ = filter_mask_counts(cols, jnp.asarray(lo), jnp.asarray(hi),
+                                 interpret=interpret)
+    return compact(mask)
+
+
+def groupby_sum_large(gids: jnp.ndarray, values: jnp.ndarray, n_groups: int,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Group-space-partitioned aggregation for G beyond the VMEM budget."""
+    if n_groups <= _GROUP_BUDGET:
+        return groupby_sum(gids, values, n_groups, interpret=interpret)
+    parts = []
+    for base in range(0, n_groups, _GROUP_BUDGET):
+        g = min(_GROUP_BUDGET, n_groups - base)
+        local = gids.astype(jnp.int32) - base
+        parts.append(groupby_sum(local, values, g, interpret=interpret))
+    return jnp.concatenate(parts, axis=0)
+
+
+def hash_probe_int64(probe_keys: jnp.ndarray, build_keys: jnp.ndarray,
+                     slots_key32: jnp.ndarray, slots_row: jnp.ndarray,
+                     interpret: bool = True):
+    """Probe with int64 keys against a table built on int32-factorized keys.
+
+    The caller factorizes build keys to int32 once (see
+    ``factorize_keys_int32``); probe keys are mapped through the same
+    factorization here (host-side searchsorted, then the kernel).
+    """
+    row, found = hash_probe(probe_keys, slots_key32, slots_row,
+                            interpret=interpret)
+    # verify true key equality to reject 32-bit factorization misses
+    ok = found & (jnp.take(build_keys, jnp.clip(row, 0, None)) == probe_keys)
+    return jnp.where(ok, row, -1), ok
+
+
+def factorize_keys_int32(build_keys_np: np.ndarray, probe_keys_np: np.ndarray):
+    """Map int64 key spaces into dense int32 ranks (host-side, exact)."""
+    uni = np.unique(build_keys_np)
+    b = np.searchsorted(uni, build_keys_np).astype(np.int32)
+    pos = np.searchsorted(uni, probe_keys_np)
+    pos = np.clip(pos, 0, len(uni) - 1)
+    hit = uni[pos] == probe_keys_np
+    p = np.where(hit, pos, -2).astype(np.int32)  # -2 never matches
+    return b, p

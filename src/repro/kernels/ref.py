@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def groupby_sum_ref(gids: jnp.ndarray, values: jnp.ndarray,
+                    n_groups: int) -> jnp.ndarray:
+    """Segment-sum (N,V) by gid, dropping out-of-range gids → (G,V) f32."""
+    gids = gids.astype(jnp.int32)
+    ok = (gids >= 0) & (gids < n_groups)
+    safe = jnp.where(ok, gids, n_groups)
+    vals = jnp.where(ok[:, None], values.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(vals, safe, n_groups + 1)[:-1]
+
+
+def filter_mask_counts_ref(cols: jnp.ndarray, lo: jnp.ndarray,
+                           hi: jnp.ndarray, tile: int = 2048):
+    """Fused conjunctive range filter → (mask, per-tile counts)."""
+    cols32 = cols.astype(jnp.float32)
+    mask = jnp.all((cols32 >= lo.astype(jnp.float32))
+                   & (cols32 <= hi.astype(jnp.float32)), axis=1)
+    n = mask.shape[0]
+    n_pad = ((n + tile - 1) // tile) * tile
+    padded = jnp.zeros((n_pad,), jnp.bool_).at[:n].set(mask)
+    counts = padded.reshape(-1, tile).sum(axis=1).astype(jnp.int32)
+    return mask, counts
+
+
+def hash_probe_ref(probe_keys: jnp.ndarray, slots_key: jnp.ndarray,
+                   slots_row: jnp.ndarray, max_probes: int = 32):
+    """Vectorized linear-probe lookup — same contract as the kernel."""
+    cap = slots_key.shape[0]
+    mask = cap - 1
+    keys = probe_keys.astype(jnp.int32)
+    mix = jnp.int32(-1640531527)
+    h = keys * mix
+    h0 = (h ^ (h >> 15)) & mask
+
+    def body(i, state):
+        row, done = state
+        cand = (h0 + i) & mask
+        k = slots_key[cand]
+        r = slots_row[cand]
+        hit = (~done) & (k == keys) & (r >= 0)
+        empty = (~done) & (r == -1)
+        row = jnp.where(hit, r, row)
+        done = done | hit | empty
+        return row, done
+
+    row = jnp.full(keys.shape, -1, jnp.int32)
+    done = jnp.zeros(keys.shape, bool)
+    row, done = jax.lax.fori_loop(0, max_probes, body, (row, done))
+    return row, row >= 0
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """Masked GQA decode attention: q (B,H,D), k/v (B,S,KVH,D) → (B,H,D)."""
+    b, h, d = q.shape
+    _, s, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kf) / (d ** 0.5)
+    pos = jnp.arange(s)[None, None, None, :]
+    scores = jnp.where(pos < lengths[:, None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first init, and the production meshes need 512 host
+placeholder devices.  Do not set that flag globally (smoke tests and benches
+must see 1 device).
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. declares every model input as ShapeDtypeStruct (no allocation),
+  3. jit(...).lower(...).compile() with explicit in/out shardings,
+  4. records memory_analysis() (proves per-chip fit vs the 16 GB v5e budget)
+     and cost_analysis() FLOPs/bytes + HLO collective bytes → JSON artifact
+     consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --sweep            # every cell, both meshes
+  python -m repro.launch.dryrun --arch sirius-tpch ...   # SQL fragments
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs.base import ArchConfig, Shape, all_configs, get_config  # noqa: E402
+from .hlo_analysis import (  # noqa: E402
+    collective_bytes, hbm_traffic_estimate, loop_corrected_flops,
+)
+from .mesh import data_axes, make_production_mesh, make_sql_mesh  # noqa: E402
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: Shape) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), "int32"),
+                 "targets": _sds((b, s), "int32")}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), "int32")}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": _sds((b, 1), "int32")}
+    if cfg.n_img_tiles and shape.kind != "decode":
+        n_img = cfg.n_img_tiles * cfg.img_patches
+        batch["img_embeds"] = _sds((b, n_img, cfg.d_model), cfg.dtype)
+    if cfg.enc_layers and shape.kind != "decode":
+        batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# sharding spec builders
+# ---------------------------------------------------------------------------
+
+
+def _batch_spec(mesh, b: int) -> P:
+    axes = data_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if b % n == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()          # e.g. long_500k batch=1: no batch parallelism
+
+
+def cache_shardings(cache_struct, mesh, b):
+    """KV/latent caches: batch over data axes, sequence over 'model'."""
+    bspec = _batch_spec(mesh, b)
+    baxes = bspec[0] if len(bspec) else None
+
+    def leaf(path, x):
+        name = path[-1] if path else ""
+        nd = len(x.shape)
+
+        def pad(tail):
+            # stacked caches carry a leading scan-periods dim → pad left
+            return NamedSharding(mesh, P(*([None] * (nd - len(tail))
+                                           + list(tail))))
+
+        if name == "length":
+            return NamedSharding(mesh, P(baxes) if baxes else P())
+        if name in ("k", "v"):            # (…, B, S, KVH, hd): S over model
+            return pad([baxes, "model", None, None])
+        if name in ("ckv", "krope"):      # (…, B, S, rank): S over model
+            return pad([baxes, "model", None])
+        if name == "enc_out":             # (B, 1500, d): d over model
+            return pad([baxes, None, "model"])
+        if name == "conv":                # (…, B, K-1, din): din over model
+            return pad([baxes, None, "model"])
+        if name == "ssm":                 # (…, B, din, N): din over model
+            return pad([baxes, "model", None])
+        if nd >= 1:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        return NamedSharding(mesh, P())
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, path + (str(i),))
+                              for i, v in enumerate(tree))
+        return leaf(path, tree)
+
+    return walk(cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    from ..models import lm
+    from ..training.train_step import (
+        batch_shardings, make_train_step, param_shardings, state_shardings,
+    )
+    from ..training.optimizer import init_opt_state
+
+    cfg = get_config(arch)
+    shape = next(s for s in cfg.shapes() if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    b = shape.global_batch
+    batch_struct = input_specs(cfg, shape)
+
+    jax.sharding.set_mesh(mesh)   # ambient mesh: activation constraints bind
+    t0 = time.time()
+    if shape.kind == "train":
+        state_struct = jax.eval_shape(
+            lambda: {"params": lm.init_params(jax.random.PRNGKey(0), cfg),
+                     "opt": init_opt_state(
+                         lm.init_params(jax.random.PRNGKey(0), cfg))})
+        n_exp = cfg.moe.n_experts if cfg.moe else None
+        in_sh = (state_shardings(state_struct, mesh, fsdp=True,
+                                 n_experts=n_exp),
+                 batch_shardings(batch_struct, mesh))
+        step = make_train_step(cfg)
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=(in_sh[0], None)).lower(
+            state_struct, batch_struct)
+    elif shape.kind == "prefill":
+        params_struct = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        # serving params are bf16 TP-sharded
+        params_struct = jax.tree.map(
+            lambda x: _sds(x.shape, cfg.dtype), params_struct)
+        n_exp = cfg.moe.n_experts if cfg.moe else None
+        p_sh = param_shardings(params_struct, mesh, fsdp=False,
+                               n_experts=n_exp)
+        b_sh = batch_shardings(batch_struct, mesh)
+
+        def serve_prefill(params, batch):
+            return lm.prefill(params, cfg, batch["tokens"],
+                              img_embeds=batch.get("img_embeds"),
+                              frames=batch.get("frames"))
+
+        lowered = jax.jit(serve_prefill, in_shardings=(p_sh, b_sh)).lower(
+            params_struct, batch_struct)
+    else:  # decode
+        params_struct = jax.eval_shape(
+            lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        params_struct = jax.tree.map(
+            lambda x: _sds(x.shape, cfg.dtype), params_struct)
+        n_exp = cfg.moe.n_experts if cfg.moe else None
+        p_sh = param_shardings(params_struct, mesh, fsdp=False,
+                               n_experts=n_exp)
+        cache_struct = jax.eval_shape(
+            lambda: lm.init_cache(cfg, b, shape.seq_len))
+        c_sh = cache_shardings(cache_struct, mesh, b)
+        tok_sh = {"tokens": NamedSharding(mesh, _batch_spec(mesh, b))}
+
+        def serve_decode(params, cache, batch):
+            return lm.decode_step(params, cfg, cache, batch["tokens"])
+
+        lowered = jax.jit(
+            serve_decode, in_shardings=(p_sh, c_sh, tok_sh),
+            out_shardings=(None, c_sh)).lower(
+            params_struct, cache_struct, batch_struct)
+    lower_time = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_time = time.time() - t0
+    return cfg, shape, compiled, lower_time, compile_time
+
+
+def analyze(compiled, n_chips: int) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    flops = loop_corrected_flops(hlo, float(cost.get("flops", 0.0)))
+    out = {
+        "flops_per_device": flops["flops"],
+        "flops_detail": flops,
+        "bytes_accessed_per_device": hbm_traffic_estimate(cost),
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem,
+                                            "generated_code_size_in_bytes",
+                                            None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "n_chips": n_chips,
+    }
+    arg = out["memory"]["argument_bytes"] or 0
+    tmp = out["memory"]["temp_bytes"] or 0
+    outb = out["memory"]["output_bytes"] or 0
+    alias = out["memory"]["alias_bytes"] or 0
+    # aliased outputs (donated state) do not double-count
+    resident = arg + tmp + max(outb - alias, 0)
+    out["memory"]["resident_bytes_per_chip"] = resident
+    out["memory"]["fits_16gb_v5e"] = bool(resident <= HBM_PER_CHIP)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             outdir: Optional[str] = None) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = 512 if multi_pod else 256
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "status": "ok"}
+    try:
+        if arch == "sirius-tpch":
+            from .sql_dryrun import lower_sql_fragment
+            compiled, lt, ct, extra = lower_sql_fragment(
+                shape_name, multi_pod=multi_pod)
+            record.update(extra)
+        else:
+            cfg, shape, compiled, lt, ct = lower_cell(arch, shape_name,
+                                                      multi_pod)
+            record["model_params"] = cfg.param_count()
+            record["active_params"] = cfg.active_param_count()
+            record["seq_len"] = shape.seq_len
+            record["global_batch"] = shape.global_batch
+            record["kind"] = shape.kind
+        record.update(analyze(compiled, n_chips))
+        record["lower_time_s"] = round(lt, 2)
+        record["compile_time_s"] = round(ct, 2)
+        mem = record["memory"]
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK  "
+              f"flops/dev={record['flops_per_device']:.3e}  "
+              f"resident/chip={mem['resident_bytes_per_chip']/2**30:.2f}GiB "
+              f"fits_v5e={mem['fits_16gb_v5e']}")
+        print(f"  memory_analysis: {mem}")
+        coll = record["collective_bytes_per_device"]
+        print(f"  collectives/dev: total={coll.get('total', 0):.3e}B "
+              f"{ {k: round(v/2**20, 1) for k, v in coll.items() if k not in ('total', 'loops_detected')} } MiB")
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+              f"FAILED {record['error']}")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def all_cells():
+    cells = []
+    for name, cfg in sorted(all_configs().items()):
+        for s in cfg.shapes():
+            cells.append((name, s.name))
+    cells.append(("sirius-tpch", "q3_sf100"))
+    cells.append(("sirius-tpch", "q3pt_sf100"))   # predicate-transfer variant
+    cells.append(("sirius-tpch", "q1_sf100"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--outdir", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}
+    todo = all_cells() if args.sweep else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes[args.mesh]:
+            rec = run_cell(arch, shape, mp, outdir=args.outdir)
+            failures += rec["status"] != "ok"
+    print(f"[dryrun] done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

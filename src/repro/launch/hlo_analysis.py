@@ -1,0 +1,219 @@
+"""HLO text analysis: collective bytes for the roofline's third term.
+
+`cost_analysis()` has no collective accounting, so we parse the optimized
+HLO: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its result-shape bytes (all-reduce counts
+double: reduce-scatter + all-gather equivalent).  Collectives inside while
+bodies (scan'd layers) are multiplied by the loop trip count, recovered from
+the largest integer constant in the loop condition (best effort — validated
+against a known scan+psum program in tests), with nested loops multiplying.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, list] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if current is None:
+            if stripped.endswith("{") and ("->" in stripped
+                                           or stripped.startswith("ENTRY")):
+                name = stripped.split()[0].lstrip("%")
+                if name == "ENTRY":
+                    name = stripped.split()[1].lstrip("%")
+                current = name
+                comps[current] = []
+        else:
+            if stripped == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+_CALL_RE = re.compile(
+    r"\b(body|condition|calls|to_apply|branch_computations)="
+    r"(\{[^}]*\}|%?[\w\.\-]+)")
+
+
+def _effective_multipliers(comps: Dict[str, str]) -> Dict[str, float]:
+    """Loop-trip multiplier per computation: while bodies multiply by their
+    trip count; fusion/call/to_apply children inherit the caller's."""
+    children: Dict[str, list] = defaultdict(list)   # parent → [(child, kind)]
+    base_trip: Dict[str, int] = {}
+    referenced = set()
+    for cname, body in comps.items():
+        for m in _CALL_RE.finditer(body):
+            kind = m.group(1)
+            names = [n.strip().lstrip("%")
+                     for n in m.group(2).strip("{}").split(",")]
+            for child in names:
+                if child not in comps:
+                    continue
+                referenced.add(child)
+                children[cname].append((child, kind))
+                if kind == "body":
+                    # trip count from the sibling condition computation
+                    cond_m = re.search(
+                        r"condition=%?([\w\.\-]+)", body[max(0, m.start()-200):
+                                                         m.end()+200])
+                    cond = cond_m.group(1) if cond_m else None
+                    consts = [int(c) for c in
+                              _CONST_RE.findall(comps.get(cond, ""))]
+                    base_trip[child] = max(consts) if consts else 1
+
+    eff: Dict[str, float] = defaultdict(lambda: 1.0)
+
+    def propagate(cname: str, mult: float, depth: int):
+        if depth > 50:
+            return
+        for child, kind in children.get(cname, []):
+            m = mult * (base_trip.get(child, 1) if kind == "body" else 1)
+            if m > eff[child]:
+                eff[child] = m
+                propagate(child, m, depth + 1)
+
+    for root in comps:
+        if root not in referenced:
+            eff[root] = 1.0
+            propagate(root, 1.0, 0)
+    return eff
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """→ {'all-reduce': bytes, ..., 'total': bytes, 'loops_detected': 0/1}."""
+    comps = _computations(hlo)
+    eff = _effective_multipliers(comps)
+
+    totals: Dict[str, float] = defaultdict(float)
+    any_loops = False
+    for cname, body in comps.items():
+        mult = eff[cname]
+        if mult > 1:
+            any_loops = True
+        for line in body.splitlines():
+            m = _OP_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            op = m.group(1)
+            lhs = line.split("=", 1)
+            if len(lhs) < 2:
+                continue
+            # result shapes: everything before the op token on the rhs
+            pre = lhs[1][: m.start(1) - len(lhs[0]) - 1]
+            shapes = _SHAPE_RE.findall(pre)
+            if not shapes:
+                continue
+            b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            factor = 2.0 if op == "all-reduce" else 1.0
+            totals[op] += b * factor * mult
+
+    out = dict(totals)
+    out["total"] = sum(totals.values())
+    out["loops_detected"] = float(any_loops)
+    return out
+
+
+def hbm_traffic_estimate(cost: dict) -> float:
+    for k in ("bytes accessed",):
+        if k in cost:
+            return float(cost[k])
+    return sum(float(v) for k, v in cost.items()
+               if k.startswith("bytes accessed"))
+
+
+# ---------------------------------------------------------------------------
+# loop-corrected FLOPs (XLA's cost_analysis counts while bodies ONCE)
+# ---------------------------------------------------------------------------
+
+_DOT_LINE_RE = re.compile(r"=\s*.*?\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(?:\()?(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
+_DOT_ARGS_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)")
+
+
+def dot_flops(hlo: str) -> float:
+    """Matmul FLOPs with loop trip counts applied.
+
+    flops(dot) = 2 × |result| × (product of lhs contracting dim sizes).
+    Operand shapes are resolved through a per-computation symbol table
+    (HLO bodies reference operands by name only).  Elementwise FLOPs are not
+    counted (matmuls dominate every assigned workload); pair with
+    cost_analysis and take the max.
+    """
+    comps = _computations(hlo)
+    eff = _effective_multipliers(comps)
+    total = 0.0
+    for cname, body in comps.items():
+        mult = eff[cname]
+        symbols: Dict[str, list] = {}
+        for line in body.splitlines():
+            dm = _DEF_RE.match(line)
+            if dm:
+                symbols[dm.group(1)] = [int(d) for d in
+                                        dm.group(3).split(",") if d]
+        for line in body.splitlines():
+            if not _DOT_LINE_RE.search(line):
+                continue
+            dm = _DEF_RE.match(line)
+            am = _DOT_ARGS_RE.search(line)
+            cm = _CONTRACT_RE.search(line)
+            if not (dm and am and cm):
+                continue
+            result_dims = [int(d) for d in dm.group(3).split(",") if d]
+            lhs_dims = symbols.get(am.group(1))
+            if lhs_dims is None:
+                # operand may carry an inline shape (entry computations)
+                inline = _SHAPE_RE.findall(line.split("dot(", 1)[1])
+                lhs_dims = ([int(d) for d in inline[0][1].split(",") if d]
+                            if inline else None)
+            if lhs_dims is None:
+                continue
+            cdims = [int(i) for i in cm.group(1).split(",") if i]
+            contract = 1
+            for i in cdims:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+            res = 1
+            for d in result_dims:
+                res *= d
+            total += 2.0 * res * contract * mult
+    return total
+
+
+def loop_corrected_flops(hlo: str, cost_flops: float) -> dict:
+    df = dot_flops(hlo)
+    return {"cost_analysis_flops": cost_flops,
+            "dot_flops_loop_corrected": df,
+            "flops": max(df, cost_flops)}

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod pass."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sql_mesh(*, multi_pod: bool = False):
+    """SQL-engine mesh: fragments shard over a flat 'data' axis (one shard
+    per chip; the pod axis nests for hierarchical shuffles)."""
+    if multi_pod:
+        return jax.make_mesh((2, 256), ("pod", "data"))
+    return jax.make_mesh((256,), ("data",))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh (pod folds into data parallelism)."""
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)

@@ -1,0 +1,221 @@
+"""SQL-engine fragment dry-run: the paper's own workload on the production mesh.
+
+Lowers whole TPC-H SF100 distributed fragments — scan→filter→(semi join)→
+shuffle→join→aggregate→top-k — as ONE compiled shard_map program per
+fragment (the compiled-pipeline fusion the eager libcudf engine cannot do,
+DESIGN.md §2).  Single-pod: flat 256-shard 'data' mesh; multi-pod: 2 pods ×
+256, with the **hierarchical pod-aware shuffle**.
+
+Money columns are f32 on the TPU path (v5e has no native f64; the runnable
+CPU engine keeps f64, and the precision strategy — int64-cents fixed point —
+is documented in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.static_ops import local_sort_agg, static_inner_join, static_semi_join, static_topk
+from ..exchange.service import Frame, shuffle, shuffle_hierarchical
+from ..relational.table import date_to_days
+from .mesh import make_sql_mesh
+
+SF = 100
+ROWS = {
+    "lineitem": int(6_001_215 * SF),
+    "orders": int(1_500_000 * SF),
+    "customer": int(150_000 * SF),
+}
+
+
+def _round_up(x: int, m: int = 128) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _caps(n_shards: int):
+    return {t: _round_up(-(-r // n_shards)) for t, r in ROWS.items()}
+
+
+def q3_inputs(n_shards: int, compress: bool = False):
+    """compress=True: planner-narrowed physical types (paper future work —
+    'lightweight compression'): SF100 orderkeys fit int32, discount is a
+    dictionary of 11 two-decimal values → uint8 codes, shipdate stays int32,
+    money f32.  Halves the dominant shuffle/sort payload widths."""
+    c = _caps(n_shards)
+    key_t = "int32" if compress else "int64"
+    disc_t = "uint8" if compress else "float32"
+    li = {
+        "l_orderkey": _sds((n_shards * c["lineitem"],), key_t),
+        "l_extendedprice": _sds((n_shards * c["lineitem"],), "float32"),
+        "l_discount": _sds((n_shards * c["lineitem"],), disc_t),
+        "l_shipdate": _sds((n_shards * c["lineitem"],), "int32"),
+    }
+    oo = {
+        "o_orderkey": _sds((n_shards * c["orders"],), key_t),
+        "o_custkey": _sds((n_shards * c["orders"],), key_t),
+        "o_orderdate": _sds((n_shards * c["orders"],), "int32"),
+        "o_shippriority": _sds((n_shards * c["orders"],), "int8"
+                               if compress else "int32"),
+    }
+    cu = {
+        "c_custkey": _sds((n_shards * c["customer"],), key_t),
+        "c_mktsegment": _sds((n_shards * c["customer"],), "int8"
+                             if compress else "int32"),
+    }
+    valid = {t: _sds((n_shards * c[t],), "bool")
+             for t in ("lineitem", "orders", "customer")}
+    return li, oo, cu, valid, c
+
+
+def build_q3_fragment(multi_pod: bool, predicate_transfer: bool = False,
+                      compress: bool = False):
+    """→ (jitted fn, input ShapeDtypeStructs).  One fused fragment.
+
+    predicate_transfer=True inserts the Bloom pre-filter (beyond-paper,
+    DESIGN.md §7): lineitem rows that cannot join any filtered order are
+    dropped before the all_to_all.
+    """
+    mesh = make_sql_mesh(multi_pod=multi_pod)
+    n_data = mesh.shape["data"]
+    n_shards = n_data * (mesh.shape.get("pod", 1))
+    li, oo, cu, valid, caps = q3_inputs(n_shards, compress)
+    cutoff = date_to_days("1995-03-15")
+    seg_code = 1  # BUILDING's dictionary code (structural stand-in)
+    slack = 2.0
+    # Predicate transfer tightens the planner's lineitem-shuffle cardinality
+    # estimate: only ~9%% of lineitem joins a BUILDING+date-filtered order
+    # (catalog estimate + Bloom FP margin) → smaller static buckets → fewer
+    # all_to_all bytes in the compiled fragment.
+    pt_sel = 0.15 if predicate_transfer else 1.0
+    o_out = _round_up(int(caps["orders"] * slack / n_data) + 8, 8)
+    l_out = _round_up(int(caps["lineitem"] * slack * pt_sel / n_data) + 8, 8)
+    o_pod = _round_up(int(caps["orders"] * slack / 2) + 8, 8)
+    l_pod = _round_up(int(caps["lineitem"] * slack * pt_sel / 2) + 8, 8)
+    TOPK = 10
+
+    def fragment(lcols, lvalid, ocols, ovalid, ccols, cvalid):
+        # customer filter + co-located semi join
+        cmask = cvalid & (ccols["c_mktsegment"] == seg_code)
+        ofr = Frame({k: ocols[k] for k in ("o_orderkey", "o_orderdate",
+                                           "o_shippriority")},
+                    ovalid & (ocols["o_orderdate"] < cutoff))
+        ofr = static_semi_join(ofr, ocols["o_custkey"], ccols["c_custkey"],
+                               cmask)
+        # exchange: orders shuffled to orderkey shards
+        if multi_pod:
+            ofr, ov1 = shuffle_hierarchical(ofr, "o_orderkey", "pod", "data",
+                                            o_pod, o_out)
+        else:
+            ofr, ov1 = shuffle(ofr, ofr.columns["o_orderkey"], "data", o_out)
+        # lineitem filter (+ optional Bloom predicate transfer) + shuffle
+        lmask = lvalid & (lcols["l_shipdate"] > cutoff)
+        if predicate_transfer:
+            from ..exchange.bloom import (
+                bloom_build, bloom_maybe_contains, bloom_or_across)
+            axes = ("pod", "data") if multi_pod else ("data",)
+            bloom = bloom_or_across(
+                bloom_build(ofr.columns["o_orderkey"], ofr.valid, 1 << 22),
+                axes)
+            lmask = lmask & bloom_maybe_contains(bloom, lcols["l_orderkey"])
+        lfr = Frame({k: lcols[k] for k in ("l_orderkey", "l_extendedprice",
+                                           "l_discount")}, lmask)
+        if multi_pod:
+            lfr, ov2 = shuffle_hierarchical(lfr, "l_orderkey", "pod", "data",
+                                            l_pod, l_out)
+        else:
+            lfr, ov2 = shuffle(lfr, lfr.columns["l_orderkey"], "data", l_out)
+        # co-located PK-FK join + grouped agg + local top-k
+        j = static_inner_join(lfr, lfr.columns["l_orderkey"], ofr,
+                              ofr.columns["o_orderkey"])
+        disc = j.columns["l_discount"]
+        if compress:   # dequantize the dictionary code at use
+            disc = disc.astype(jnp.float32) * 0.01
+        rev = j.columns["l_extendedprice"] * (1.0 - disc)
+        agg, _ = local_sort_agg(
+            j, j.columns["l_orderkey"], sums={"revenue": rev},
+            firsts={"o_orderdate": j.columns["o_orderdate"],
+                    "o_shippriority": j.columns["o_shippriority"]})
+        top = static_topk(agg, agg.columns["revenue"], TOPK)
+        return (top.columns["key"], top.columns["revenue"],
+                top.columns["o_orderdate"], top.columns["o_shippriority"],
+                top.valid, ov1 + ov2)
+
+    spec = P(("pod", "data")) if multi_pod else P("data")
+    fn = jax.jit(jax.shard_map(
+        fragment, mesh=mesh,
+        in_specs=(spec,) * 6,
+        out_specs=(spec, spec, spec, spec, spec, P()),
+        check_vma=False))
+    args = (li, valid["lineitem"], oo, valid["orders"], cu,
+            valid["customer"])
+    return fn, args, {"n_shards": n_shards, "caps": caps,
+                      "shuffle_out_caps": {"orders": o_out, "lineitem": l_out}}
+
+
+def build_q1_fragment(multi_pod: bool):
+    """Q1: scan→filter→9-group aggregate→psum (compute-bound contrast)."""
+    mesh = make_sql_mesh(multi_pod=multi_pod)
+    n_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    c = _caps(n_shards)["lineitem"]
+    cutoff = date_to_days("1998-09-02")
+    G = 9
+    cols = {
+        "l_shipdate": _sds((n_shards * c,), "int32"),
+        "l_returnflag": _sds((n_shards * c,), "int32"),
+        "l_linestatus": _sds((n_shards * c,), "int32"),
+        "l_quantity": _sds((n_shards * c,), "float32"),
+        "l_extendedprice": _sds((n_shards * c,), "float32"),
+        "l_discount": _sds((n_shards * c,), "float32"),
+        "l_tax": _sds((n_shards * c,), "float32"),
+    }
+    vspec = _sds((n_shards * c,), "bool")
+    axes = ("pod", "data") if multi_pod else ("data",)
+
+    def fragment(cc, valid):
+        mask = valid & (cc["l_shipdate"] <= cutoff)
+        gid = cc["l_returnflag"] * 3 + cc["l_linestatus"]
+        gid = jnp.where(mask, gid, G)
+        ext, disc = cc["l_extendedprice"], cc["l_discount"]
+        disc_price = ext * (1.0 - disc)
+        vals = jnp.stack([cc["l_quantity"], ext, disc_price,
+                          disc_price * (1.0 + cc["l_tax"]), disc,
+                          jnp.ones_like(ext)], axis=1)
+        vals = jnp.where(mask[:, None], vals, 0.0)
+        partial = jax.ops.segment_sum(vals, gid, G + 1)[:G]
+        for ax in axes:
+            partial = jax.lax.psum(partial, ax)
+        return partial
+
+    spec = P(("pod", "data")) if multi_pod else P("data")
+    fn = jax.jit(jax.shard_map(fragment, mesh=mesh,
+                               in_specs=(spec, spec), out_specs=P(),
+                               check_vma=False))
+    return fn, (cols, vspec), {"n_shards": n_shards, "cap": c}
+
+
+def lower_sql_fragment(shape_name: str, multi_pod: bool):
+    t0 = time.time()
+    if shape_name.startswith("q3"):
+        variant = shape_name.split("_")[0][2:]     # '', 'pt', 'ptc', 'c'
+        fn, args, extra = build_q3_fragment(
+            multi_pod, predicate_transfer="pt" in variant,
+            compress="c" in variant)
+    elif shape_name.startswith("q1"):
+        fn, args, extra = build_q1_fragment(multi_pod)
+    else:
+        raise ValueError(f"unknown sql dry-run shape {shape_name}")
+    lowered = fn.lower(*args)
+    lt = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    ct = time.time() - t0
+    extra = {"kind": "sql-fragment", "sf": SF, **extra}
+    return compiled, lt, ct, extra

@@ -1,0 +1,579 @@
+"""Model layer library for the assigned architecture suite.
+
+Pure functions over explicit param pytrees (no flax).  Compute dtype follows
+the config (bf16 at scale, f32 in smoke tests); params are stored f32 and
+cast at use (mixed precision).  Attention over long sequences is blockwise
+(online softmax, jax.checkpoint per q-block) so train_4k / prefill_32k lower
+with flash-style memory instead of S² score materialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """Ambient-mesh sharding constraint; identity when no mesh is set.
+
+    ``axes`` entries: None, 'model', or 'batch' (expands to the mesh's
+    ('pod','data') axes).  Used to pin large intermediates (MoE dispatch
+    buffers) that GSPMD propagation would otherwise replicate.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    baxes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    batch = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    spec = []
+    for i, a in enumerate(axes):
+        if a == "batch":
+            n = 1
+            for ax in (baxes or ()):
+                n *= mesh.shape[ax]
+            spec.append(batch if n and x.shape[i] % n == 0 else None)
+        elif a == "model":
+            spec.append("model" if x.shape[i] % mesh.shape["model"] == 0
+                        else None)
+        else:
+            spec.append(None)
+    from jax.sharding import PartitionSpec as _P
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+def normal(rng, shape, scale):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., S, H, D) with pos (..., S) — rotate pairs (first/second half)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs        # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (...,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attend_block(q, k, v, q_off, k_off, causal, scale, kv_len):
+    """q (B,H,bq,Dk) vs k (B,KVH,bk,Dk) / v (B,KVH,bk,Dv), GQA grouped."""
+    b, h, bq, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, bq, d)
+    s = jnp.einsum("bkgqd,bkjd->bkgqj", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kpos = k_off + jnp.arange(k.shape[2])
+    mask = jnp.broadcast_to((kpos < kv_len)[None, :], (bq, k.shape[2]))
+    if causal:
+        qpos = q_off + jnp.arange(bq)
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgqj,bkjd->bkgqd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def blockwise_attention(q, k, v, causal=True, block_q=512, block_kv=1024):
+    """Flash-style attention: q (B,Sq,H,Dk), k (B,Skv,KVH,Dk),
+    v (B,Skv,KVH,Dv) → (B,Sq,H,Dv).  Sq may differ from Skv (cross-attn) and
+    Dv from Dk (MLA)."""
+    b, sq, h, dk = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = 1.0 / (dk ** 0.5)
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    q_len = sq
+    if sq % bq:                           # pad q (e.g. whisper's 1500 frames)
+        qpad = bq - sq % bq
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        sq += qpad
+    kv_len = skv
+    if skv % bk:                          # pad + mask kv
+        pad = bk - skv % bk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv += pad
+    nq, nk = sq // bq, skv // bk
+
+    qt = q.transpose(0, 2, 1, 3).reshape(b, h, nq, bq, dk)
+    kt = k.transpose(0, 2, 1, 3).reshape(b, kvh, nk, bk, dk)
+    vt = v.transpose(0, 2, 1, 3).reshape(b, kvh, nk, bk, dv)
+    # Pin head-sharding through the block scans: without this GSPMD
+    # re-gathers ~1 GiB activations on EVERY (q-block × kv-block) step —
+    # 80×32 times for qwen2-72b train (EXPERIMENTS §Perf b).  kvh < axis
+    # size falls back to replicated k/v blocks (small), q stays h-sharded.
+    qt = constrain(qt, "batch", "model", None, None, None)
+    kt = constrain(kt, "batch", "model", None, None, None)
+    vt = constrain(vt, "batch", "model", None, None, None)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_block(qi, q_blk):
+        g = h // kvh
+
+        def kv_step(carry, kj):
+            m_run, l_run, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kt, kj, 2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vt, kj, 2, keepdims=False)
+            m, l, o = _attend_block(q_blk, kb, vb, qi * bq, kj * bk,
+                                    causal, scale, kv_len)
+            m = m.reshape(b, h, q_blk.shape[2])
+            l = l.reshape(b, h, q_blk.shape[2])
+            o = o.reshape(b, h, q_blk.shape[2], dv)
+            m_new = jnp.maximum(m_run, m)
+            alpha = jnp.exp(m_run - m_new)
+            beta = jnp.exp(m - m_new)
+            l_new = l_run * alpha + l * beta
+            acc = acc * alpha[..., None] + o * beta[..., None]
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, dv), jnp.float32)
+        # NOTE: all kv blocks are visited; causal masking zeroes the upper
+        # triangle (2x the minimal causal FLOPs — a known target recorded in
+        # EXPERIMENTS.md §Perf for the hillclimb).
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l_f, 1e-30)[..., None]
+
+    def scan_q(_, qi):
+        q_blk = jax.lax.dynamic_index_in_dim(qt, qi, 2, keepdims=False)
+        return None, q_block(qi, q_blk)
+
+    _, blocks = jax.lax.scan(scan_q, None, jnp.arange(nq))
+    # blocks: (nq, B, H, bq, D) → (B, S, H, D)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, dv)
+    return out[:, :q_len].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ArchConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": normal(ks[0], (d, h * hd), d ** -0.5),
+        "wk": normal(ks[1], (d, kvh * hd), d ** -0.5),
+        "wv": normal(ks[2], (d, kvh * hd), d ** -0.5),
+        "wo": normal(ks[3], (h * hd, d), (h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvh * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray, pos: jnp.ndarray):
+    dt = x.dtype
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_train(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    b, s, d = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _qkv(p, cfg, x, pos)
+    o = blockwise_attention(q, k, v, causal=causal)
+    o = o.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     length: jnp.ndarray):
+    """x (B,1,d); cache (B,S,KVH,hd); length (B,) current cache fill."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = length[:, None].astype(jnp.int32)                   # (B,1)
+    q, k, v = _qkv(p, cfg, x, pos)
+    # index literals must match i's dtype exactly (x64 mode promotes bare
+    # 0 to int64, which lax.dynamic_update_slice rejects)
+    cache_k = jax.vmap(
+        lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk, (i, i * 0, i * 0))
+    )(cache_k, k, length.astype(jnp.int32))
+    cache_v = jax.vmap(
+        lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv, (i, i * 0, i * 0))
+    )(cache_v, v, length.astype(jnp.int32))
+    # masked decode attention over the cache (kernel-accelerated on TPU)
+    from ..kernels.ref import decode_attention_ref
+    o = decode_attention_ref(q[:, 0], cache_k, cache_v, length + 1)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    return o @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) attention
+# ---------------------------------------------------------------------------
+
+
+def init_mla(rng, cfg: ArchConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": normal(ks[0], (d, h * qd), d ** -0.5),
+        "wdkv": normal(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), d ** -0.5),
+        "wuk": normal(ks[2], (m.kv_lora_rank, h * m.qk_nope_head_dim),
+                      m.kv_lora_rank ** -0.5),
+        "wuv": normal(ks[3], (m.kv_lora_rank, h * m.v_head_dim),
+                      m.kv_lora_rank ** -0.5),
+        "wo": normal(ks[4], (h * m.v_head_dim, d), (h * m.v_head_dim) ** -0.5),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def _mla_qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray, pos: jnp.ndarray,
+             c_kv: jnp.ndarray, k_rope: jnp.ndarray):
+    """Expand latent cache into per-head K/V; build rope-augmented Q."""
+    m = cfg.mla
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wq"].astype(dt)).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    sl = c_kv.shape[1]
+    k_nope = (c_kv @ p["wuk"].astype(dt)).reshape(b, sl, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wuv"].astype(dt)).reshape(b, sl, h, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, sl, h, m.qk_rope_head_dim))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return qq, k, v
+
+
+def mla_train(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    m = cfg.mla
+    dt = x.dtype
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    dkv = x @ p["wdkv"].astype(dt)
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None], pos, cfg.rope_theta)[:, :, 0]
+    q, k, v = _mla_qkv(p, cfg, x, pos, c_kv, k_rope)
+    o = blockwise_attention(q, k, v, causal=True)
+    o = o.reshape(b, s, cfg.n_heads * m.v_head_dim)
+    return o @ p["wo"].astype(dt)
+
+
+def mla_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+               cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+               length: jnp.ndarray):
+    """MLA decode: the cache stores only (kv_lora + rope_dim) per token."""
+    m = cfg.mla
+    dt = x.dtype
+    b = x.shape[0]
+    pos = length[:, None].astype(jnp.int32)
+    dkv = x @ p["wdkv"].astype(dt)
+    c_kv_t, k_rope_t = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv_t = rmsnorm(c_kv_t, p["kv_norm"], cfg.norm_eps)
+    k_rope_t = apply_rope(k_rope_t[:, :, None], pos, cfg.rope_theta)[:, :, 0]
+    cache_ckv = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i, i * 0))
+    )(cache_ckv, c_kv_t, length.astype(jnp.int32))
+    cache_krope = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i, i * 0))
+    )(cache_krope, k_rope_t, length.astype(jnp.int32))
+    q, k, v = _mla_qkv(p, cfg, x, pos, cache_ckv, cache_krope)
+    # masked single-token attention
+    sl = k.shape[1]
+    qf = q[:, 0].astype(jnp.float32)                          # (B,H,qd)
+    kf = k.astype(jnp.float32)
+    s_ = jnp.einsum("bhd,bshd->bhs", qf, kf) / (q.shape[-1] ** 0.5)
+    mask = jnp.arange(sl)[None, None] < (length + 1)[:, None, None]
+    s_ = jnp.where(mask, s_, -1e30)
+    pr = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", pr, v.astype(jnp.float32)).astype(dt)
+    o = o.reshape(b, 1, cfg.n_heads * m.v_head_dim)
+    return o @ p["wo"].astype(dt), cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_kind == "gelu":
+        return {"w1": normal(ks[0], (d, ff), d ** -0.5),
+                "w2": normal(ks[1], (ff, d), ff ** -0.5)}
+    return {"wg": normal(ks[0], (d, ff), d ** -0.5),
+            "wu": normal(ks[1], (d, ff), d ** -0.5),
+            "wd": normal(ks[2], (ff, d), ff ** -0.5)}
+
+
+def mlp(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_kind == "gelu":
+        return jax.nn.gelu(x @ p["w1"].astype(dt)) @ p["w2"].astype(dt)
+    g = jax.nn.silu(x @ p["wg"].astype(dt))
+    return (g * (x @ p["wu"].astype(dt))) @ p["wd"].astype(dt)
+
+
+def init_moe(rng, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.expert_d_ff, m.n_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": normal(ks[0], (d, e), d ** -0.5),
+        "wg": normal(ks[1], (e, d, ff), d ** -0.5),
+        "wu": normal(ks[2], (e, d, ff), d ** -0.5),
+        "wd": normal(ks[3], (e, ff, d), ff ** -0.5),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.n_shared * ff)
+    return p
+
+
+def _moe_groups(t: int) -> int:
+    """Dispatch groups = data shards of the ambient mesh (1 when unset).
+
+    Grouped dispatch keeps every routing tensor local to its token group, so
+    GSPMD shards the (G, E, C, d) buffers on G — the production-MoE layout;
+    a flat global sort would force replicated scatters."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n if n > 0 and t % n == 0 else 1
+
+
+def moe(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Grouped sort-based token dispatch (capacity-bounded per group).
+
+    Per data-shard group: route top-k, sort token-expert pairs by expert id
+    (the TPU compaction idiom), pack into (E, C_local, d) buffers.  Expert
+    FFNs run as one batched einsum over (G, E, C, d) — G sharded over the
+    data axes, E over 'model' (expert parallelism).  FLOPs = active experts
+    only (E·C ≈ T·k·capacity_factor) — roofline-faithful.
+    """
+    m = cfg.moe
+    dt = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    ng = _moe_groups(t)
+    tl = t // ng
+    cap = max((int(tl * k * m.capacity_factor / e) + 7) // 8 * 8, 8)
+
+    xg = constrain(x.reshape(ng, tl, d), "batch", None, None)
+
+    def route(xf):                             # (tl, d) — one group
+        logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(gates, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(tl), k)
+        flat_w = top_w.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = jnp.take(flat_e, order)
+        tok_sorted = jnp.take(flat_tok, order)
+        w_sorted = jnp.take(flat_w, order)
+        starts = jnp.searchsorted(e_sorted, jnp.arange(e))
+        pos = jnp.arange(tl * k) - jnp.take(starts, e_sorted)
+        keep = pos < cap
+        slot = jnp.where(keep, e_sorted * cap + pos, e * cap)
+        xbuf = jnp.zeros((e * cap + 1, d), dt).at[slot].set(
+            jnp.take(xf, tok_sorted, axis=0), mode="drop")[:-1]
+        return xbuf, slot, tok_sorted, (w_sorted * keep)
+
+    xbufs, slots, toks, ws = jax.vmap(route)(xg)       # (G, E*C, d), ...
+    xbufs = constrain(xbufs.reshape(ng, e, cap, d),
+                      "batch", "model", None, None)
+    gg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xbufs,
+                                p["wg"].astype(dt)))
+    uu = jnp.einsum("gecd,edf->gecf", xbufs, p["wu"].astype(dt))
+    yb = jnp.einsum("gecf,efd->gecd", gg * uu, p["wd"].astype(dt))
+    yb = constrain(yb, "batch", "model", None, None).reshape(ng, e * cap, d)
+
+    def combine(ybuf, slot, tok, w):                   # per group
+        contrib = jnp.take(ybuf, jnp.clip(slot, 0, e * cap - 1), axis=0)
+        contrib = contrib * w.astype(dt)[:, None]
+        return jnp.zeros((tl, d), dt).at[tok].add(contrib)
+
+    y = jax.vmap(combine)(yb, slots, toks, ws).reshape(t, d)
+    if m.n_shared:
+        y = y + mlp(p["shared"], cfg, x.reshape(t, d))
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM)
+# ---------------------------------------------------------------------------
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(rng, cfg: ArchConfig) -> Params:
+    mm = cfg.mamba
+    d = cfg.d_model
+    din = mm.expand * d
+    r = _dt_rank(cfg)
+    ks = jax.random.split(rng, 7)
+    return {
+        "win": normal(ks[0], (d, 2 * din), d ** -0.5),
+        "conv": normal(ks[1], (mm.d_conv, din), 0.2),
+        "wx": normal(ks[2], (din, r + 2 * mm.d_state), din ** -0.5),
+        "wdt": normal(ks[3], (r, din), r ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (din,)) * 0.1, 1e-3, None))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mm.d_state + 1, dtype=jnp.float32), (din, mm.d_state))),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "wout": normal(ks[6], (din, d), din ** -0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,din), w (K,din)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def mamba_train(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    mm = cfg.mamba
+    dt_ = x.dtype
+    b, s, d = x.shape
+    din = mm.expand * d
+    r = _dt_rank(cfg)
+    xz = x @ p["win"].astype(dt_)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(xin, p["conv"]))
+    proj = xin @ p["wx"].astype(dt_)
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + mm.d_state], axis=-1)
+    delta = jax.nn.softplus(dt_r @ p["wdt"].astype(dt_)
+                            + p["dt_bias"].astype(dt_))      # (B,S,din)
+    a = -jnp.exp(p["a_log"])                                  # (din,N)
+
+    da = jnp.exp(delta.astype(jnp.float32)[..., None] * a)    # (B,S,din,N)
+    dbx = (delta * xin).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]              # (B,S,din,N)
+    # Pin scan tensors to (batch, -, model, -): the recurrence is elementwise
+    # in (din, N), so a consistent din-sharding makes every scan step
+    # collective-free (otherwise GSPMD reshards ~17MB per step × S × layers —
+    # the falcon-mamba hillclimb in EXPERIMENTS.md §Perf).
+    da = constrain(da, "batch", None, "model", None)
+    dbx = constrain(dbx, "batch", None, "model", None)
+
+    def step(h, inputs):
+        da_t, dbx_t = inputs
+        h = da_t * h + dbx_t
+        return h, h
+
+    h0 = constrain(jnp.zeros((b, din, mm.d_state), jnp.float32),
+                   "batch", "model", None)
+    _, hs = jax.lax.scan(step, h0,
+                         (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3)))
+    hs = hs.transpose(1, 0, 2, 3)                              # (B,S,din,N)
+    hs = constrain(hs, "batch", None, "model", None)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    y = y.astype(dt_) + xin * p["d_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["wout"].astype(dt_)
+
+
+def mamba_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Single-token step: conv_state (B,K-1,din), ssm_state (B,din,N)."""
+    mm = cfg.mamba
+    dt_ = x.dtype
+    b = x.shape[0]
+    d = cfg.d_model
+    r = _dt_rank(cfg)
+    xz = x[:, 0] @ p["win"].astype(dt_)                        # (B,2din)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_state, xin[:, None]], axis=1)  # (B,K,din)
+    conv_w = p["conv"].astype(dt_)
+    xin = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, conv_w))
+    new_conv_state = window[:, 1:]
+    proj = xin @ p["wx"].astype(dt_)
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + mm.d_state], axis=-1)
+    delta = jax.nn.softplus(dt_r @ p["wdt"].astype(dt_) + p["dt_bias"].astype(dt_))
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta.astype(jnp.float32)[..., None] * a)     # (B,din,N)
+    dbx = (delta * xin).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[:, None, :]
+    h = da * ssm_state + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)).astype(dt_)
+    y = y + xin * p["d_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return (y @ p["wout"].astype(dt_))[:, None], new_conv_state, h

@@ -1,0 +1,433 @@
+"""Unified causal-LM builder for the 10-architecture suite.
+
+A config's layers are planned as (mixer, ffn) block kinds:
+  mixer ∈ {attn, mla, mamba};  ffn ∈ {mlp, moe, none}
+and grouped into scan segments: an optional unrolled prefix
+(deepseek's dense layer 0) plus a stacked scan whose step applies one
+*period* of the pattern (1 layer for uniform archs, 8 for jamba) — so a
+72B/80L model lowers as one scanned layer body.
+
+Serving: `init_cache` builds per-layer decode state (KV for attention, latent
+(c_kv,k_rope) for MLA — the MLA cache-compression win — and (conv,ssm) state
+for Mamba); `decode_step` advances one token; `prefill` runs the full forward
+and materializes the cache.
+
+Whisper (enc-dec) and LLaVA (VLM) wrap this core; their modality frontends
+are stubs per the assignment — `input_specs()` feeds precomputed frame/patch
+embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers as L
+
+
+def _constrain_sp(x: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-parallel residual-stream constraint (Megatron-SP style).
+
+    Binds (B, S, d) activations to P(batch_axes, 'model', None) when an
+    ambient mesh with a 'model' axis is set (the dry-run lowers under
+    jax.set_mesh) and S divides the model axis; otherwise identity — smoke
+    tests and single-device runs are unaffected.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names or x.ndim != 3:
+        return x
+    m = mesh.shape["model"]
+    if x.shape[1] % m != 0:
+        return x
+    baxes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    if baxes and x.shape[0] % __import__("math").prod(
+            mesh.shape[a] for a in baxes) != 0:
+        baxes = ()
+    from jax.sharding import PartitionSpec as _P
+    spec = _P(baxes if len(baxes) > 1 else (baxes[0] if baxes else None),
+              "model", None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockKind:
+    mixer: str   # attn | mla | mamba
+    ffn: str     # mlp | moe | none
+
+
+def layer_plan(cfg: ArchConfig) -> List[BlockKind]:
+    plan = []
+    for li in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            plan.append(BlockKind("mamba", "none"))
+            continue
+        in_p = li % cfg.period
+        if cfg.family == "hybrid":
+            mixer = "attn" if in_p in cfg.attn_idx_in_period else "mamba"
+        elif cfg.mla is not None:
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        if cfg.moe is not None and li >= cfg.first_dense_layers \
+                and li % cfg.moe_every == (cfg.moe_every - 1):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        plan.append(BlockKind(mixer, ffn))
+    return plan
+
+
+def _period_len(cfg: ArchConfig) -> int:
+    p = cfg.period
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe_every)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(rng, cfg: ArchConfig, kind: BlockKind) -> Dict:
+    ks = jax.random.split(rng, 3)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif kind.mixer == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg)
+    else:
+        p["mamba"] = L.init_mamba(ks[0], cfg)
+    if kind.ffn != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ffn"] = (L.init_moe(ks[1], cfg) if kind.ffn == "moe"
+                    else L.init_mlp(ks[1], cfg))
+    return p
+
+
+def init_params(rng, cfg: ArchConfig) -> Dict:
+    plan = layer_plan(cfg)
+    period = _period_len(cfg)
+    n_prefix = cfg.first_dense_layers
+    body = plan[n_prefix:]
+    assert len(body) % period == 0, (len(body), period)
+    n_periods = len(body) // period
+    pattern = body[:period]
+
+    k_embed, k_head, k_prefix, k_stack, k_extra = jax.random.split(rng, 5)
+    params: Dict[str, Any] = {
+        "embed": L.normal(k_embed, (cfg.padded_vocab, cfg.d_model), 0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.normal(k_head, (cfg.d_model, cfg.padded_vocab),
+                                  cfg.d_model ** -0.5)
+    params["prefix"] = [
+        _init_block(k, cfg, plan[i])
+        for i, k in enumerate(jax.random.split(k_prefix, max(n_prefix, 1))
+                              [:n_prefix])]
+
+    def init_period(k):
+        sub = {}
+        for j, kind in enumerate(pattern):
+            sub[f"sub{j}"] = _init_block(jax.random.fold_in(k, j), cfg, kind)
+        return sub
+
+    stack_keys = jax.random.split(k_stack, n_periods)
+    params["stack"] = jax.vmap(init_period)(stack_keys)
+
+    if cfg.enc_layers:                      # whisper encoder
+        ke = jax.random.split(k_extra, cfg.enc_layers + 1)
+        params["enc_pos"] = L.normal(ke[0], (cfg.enc_seq, cfg.d_model), 0.02)
+
+        def init_enc(k):
+            return {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": L.init_attention(k, cfg),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "ffn": L.init_mlp(jax.random.fold_in(k, 1), cfg),
+            }
+
+        params["enc"] = jax.vmap(init_enc)(
+            jax.random.split(ke[1], cfg.enc_layers))
+        params["dec_pos"] = L.normal(
+            jax.random.fold_in(k_extra, 7), (32768, cfg.d_model), 0.02)
+
+        def init_cross(k):
+            return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                    "attn": L.init_attention(k, cfg)}
+
+        params["cross"] = jax.vmap(init_cross)(
+            jax.random.split(jax.random.fold_in(k_extra, 9), cfg.n_layers))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _block_train(p: Dict, cfg: ArchConfig, kind: BlockKind,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.mixer == "attn":
+        x = x + L.attention_train(p["attn"], cfg, h)
+    elif kind.mixer == "mla":
+        x = x + L.mla_train(p["attn"], cfg, h)
+    else:
+        x = x + L.mamba_train(p["mamba"], cfg, h)
+    if kind.ffn != "none":
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + (L.moe(p["ffn"], cfg, h) if kind.ffn == "moe"
+                 else L.mlp(p["ffn"], cfg, h))
+    return x
+
+
+def _encoder(params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"].astype(
+        jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + L.attention_train(p["attn"], cfg, h, causal=False)
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp(p["ffn"], cfg, h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return x
+
+
+def _cross_attend(p, cfg: ArchConfig, x: jnp.ndarray,
+                  enc_out: jnp.ndarray) -> jnp.ndarray:
+    """Simple full cross-attention (1500 encoder keys)."""
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    ap = p["attn"]
+    dt = x.dtype
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (h @ ap["wq"].astype(dt)).reshape(b, s, cfg.n_heads, hd)
+    k = (enc_out @ ap["wk"].astype(dt)).reshape(
+        b, enc_out.shape[1], cfg.n_kv_heads, hd)
+    v = (enc_out @ ap["wv"].astype(dt)).reshape(
+        b, enc_out.shape[1], cfg.n_kv_heads, hd)
+    o = L.blockwise_attention(q, k, v, causal=False)
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    return x + o @ ap["wo"].astype(dt)
+
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            img_embeds: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """→ final hidden states (B, S_total, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.n_img_tiles:                     # VLM: patch embeddings prefix
+        assert img_embeds is not None
+        x = jnp.concatenate([img_embeds.astype(dt), x], axis=1)
+    enc_out = None
+    if cfg.enc_layers:
+        assert frames is not None
+        enc_out = _encoder(params, cfg, frames)
+        s = x.shape[1]
+        x = x + params["dec_pos"][:s].astype(dt)
+
+    plan = layer_plan(cfg)
+    period = _period_len(cfg)
+    pattern = plan[cfg.first_dense_layers:][:period]
+
+    for i, bp in enumerate(params["prefix"]):
+        x = _block_train(bp, cfg, plan[i], x)
+
+    x = _constrain_sp(x)
+    # Cast the stacked layer params to compute dtype BEFORE the scan: the
+    # FSDP all-gather inside the scan body then moves bf16, not f32 — halves
+    # the dominant collective term of large train cells (EXPERIMENTS §Perf b).
+    dt_ = jnp.dtype(cfg.dtype)
+    stack_params = jax.tree.map(
+        lambda w: w.astype(dt_) if (hasattr(w, "dtype")
+                                    and w.dtype == jnp.float32
+                                    and w.ndim >= 3) else w,
+        params["stack"])
+    if cfg.enc_layers:
+        # interleave cross-attention after each decoder self-attn block
+        @jax.checkpoint
+        def body_fn(x, inputs):
+            p, cp = inputs
+            x = _block_train(p["sub0"], cfg, pattern[0], x)
+            x = _cross_attend(cp, cfg, x, enc_out)
+            return _constrain_sp(x)
+
+        x, _ = jax.lax.scan(lambda c, i: (body_fn(c, i), None), x,
+                            (stack_params, params["cross"]))
+    else:
+        # remat each scan step: backward recomputes one period's activations
+        @jax.checkpoint
+        def body_fn(x, p):
+            for j, kind in enumerate(pattern):
+                x = _block_train(p[f"sub{j}"], cfg, kind, x)
+            return _constrain_sp(x)
+
+        x, _ = jax.lax.scan(lambda c, i: (body_fn(c, i), None), x,
+                            stack_params)
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ArchConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = hidden.astype(jnp.float32) @ head.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:   # mask the padding tail exactly
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
+    """Next-token cross entropy; ignores positions with target < 0."""
+    hidden = forward(params, cfg, batch["tokens"],
+                     img_embeds=batch.get("img_embeds"),
+                     frames=batch.get("frames"))
+    if cfg.n_img_tiles:                     # only text positions carry loss
+        hidden = hidden[:, -batch["tokens"].shape[1]:]
+    logits = logits_fn(params, cfg, hidden)
+    targets = batch["targets"]
+    mask = targets >= 0
+    safe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ArchConfig, kind: BlockKind, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    if kind.mixer == "attn":
+        hd = cfg.resolved_head_dim
+        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+                "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt)}
+    mm = cfg.mamba
+    din = mm.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, mm.d_conv - 1, din), dt),
+            "ssm": jnp.zeros((batch, din, mm.d_state), jnp.float32)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    plan = layer_plan(cfg)
+    period = _period_len(cfg)
+    pattern = plan[cfg.first_dense_layers:][:period]
+    n_periods = (cfg.n_layers - cfg.first_dense_layers) // period
+    cache: Dict[str, Any] = {
+        "prefix": [
+            _block_cache(cfg, plan[i], batch, max_len)
+            for i in range(cfg.first_dense_layers)],
+        "stack": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(),
+            {f"sub{j}": _block_cache(cfg, kind, batch, max_len)
+             for j, kind in enumerate(pattern)}),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.enc_layers:
+        cache["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    return cache
+
+
+def _block_decode(p, cfg: ArchConfig, kind: BlockKind, x, cache, length):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.mixer == "attn":
+        o, ck, cv = L.attention_decode(p["attn"], cfg, h, cache["k"],
+                                       cache["v"], length)
+        cache = {"k": ck, "v": cv}
+        x = x + o
+    elif kind.mixer == "mla":
+        o, ckv, kr = L.mla_decode(p["attn"], cfg, h, cache["ckv"],
+                                  cache["krope"], length)
+        cache = {"ckv": ckv, "krope": kr}
+        x = x + o
+    else:
+        o, conv, ssm = L.mamba_decode(p["mamba"], cfg, h, cache["conv"],
+                                      cache["ssm"])
+        cache = {"conv": conv, "ssm": ssm}
+        x = x + o
+    if kind.ffn != "none":
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + (L.moe(p["ffn"], cfg, h) if kind.ffn == "moe"
+                 else L.mlp(p["ffn"], cfg, h))
+    return x, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache: Dict,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """tokens (B,1) → (logits (B,1,V), updated cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    length = cache["length"]
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.enc_layers:   # whisper decoder: learned positions
+        safe = jnp.clip(length, 0, params["dec_pos"].shape[0] - 1)
+        x = x + params["dec_pos"].astype(dt)[safe][:, None]
+    plan = layer_plan(cfg)
+    period = _period_len(cfg)
+    pattern = plan[cfg.first_dense_layers:][:period]
+
+    new_prefix = []
+    for i, bp in enumerate(params["prefix"]):
+        x, c = _block_decode(bp, cfg, plan[i], x, cache["prefix"][i], length)
+        new_prefix.append(c)
+
+    if cfg.enc_layers:
+        enc_out = cache["enc_out"]
+
+        def body(x, inputs):
+            p, cp, c = inputs
+            x, c_new = _block_decode(p["sub0"], cfg, pattern[0], x, c["sub0"],
+                                     length)
+            x = _cross_attend(cp, cfg, x, enc_out)
+            return x, {"sub0": c_new}
+
+        x, new_stack = jax.lax.scan(
+            body, x, (params["stack"], params["cross"], cache["stack"]))
+    else:
+        def body(x, inputs):
+            p, c = inputs
+            c_new = {}
+            for j, kind in enumerate(pattern):
+                x, cj = _block_decode(p[f"sub{j}"], cfg, kind, x,
+                                      c[f"sub{j}"], length)
+                c_new[f"sub{j}"] = cj
+            return x, c_new
+
+        x, new_stack = jax.lax.scan(body, x, (params["stack"],
+                                              cache["stack"]))
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["prefix"] = new_prefix
+    new_cache["stack"] = new_stack
+    new_cache["length"] = length + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            img_embeds=None, frames=None):
+    """Run the full forward; return last-position logits.
+
+    (The dry-run's `prefill_32k` lowers this — cache materialization for
+    subsequent decode reuses forward activations in a real server; here the
+    serving example decodes from a decode_step-built cache instead, which
+    keeps the prefill graph purely feed-forward.)
+    """
+    hidden = forward(params, cfg, tokens, img_embeds=img_embeds,
+                     frames=frames)
+    return logits_fn(params, cfg, hidden[:, -1:])

@@ -1,0 +1,159 @@
+"""Group-by aggregation.
+
+Eager path: factorize group keys host-side (exact, any cardinality), then
+device segment reductions — the hash-aggregate analogue.  The paper notes
+libcudf falls back to *sort-based* group-by for string keys; our dictionary
+codes keep strings on the hash path, which is one of the TPU-adaptation wins
+recorded in DESIGN.md.
+
+Static path: fixed ``num_groups`` scatter-add aggregation (jit / shard_map /
+kernel oracle) — group ids must already be dense small ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .expressions import Expr, evaluate
+from .table import BOOL, DATE, NUMERIC, STRING, Column, Table
+
+
+@dataclasses.dataclass
+class AggSpec:
+    """One output aggregate: fn in sum|avg|count|count_star|min|max|count_distinct."""
+
+    fn: str
+    expr: Optional[Expr]  # None for count_star
+    name: str
+
+
+def factorize_groups(table: Table, keys: Sequence[str]) -> Tuple[np.ndarray, Table]:
+    """→ (group_id per row, unique-key Table in group-id order)."""
+    if not keys:
+        return np.zeros(table.num_rows, np.int64), Table({})
+    cols = [table[k] for k in keys]
+    mats = [np.asarray(c.data) for c in cols]
+    stacked = np.stack([m.astype(np.int64) if m.dtype.kind != "f" else m for m in mats])
+    # lexsort-based exact factorization over arbitrary column count
+    order = np.lexsort(stacked[::-1])
+    sorted_cols = stacked[:, order]
+    changed = np.zeros(sorted_cols.shape[1], bool)
+    if sorted_cols.shape[1]:
+        changed[0] = True
+        for row in sorted_cols:
+            changed[1:] |= row[1:] != row[:-1]
+    gid_sorted = np.cumsum(changed) - 1
+    gids = np.empty(table.num_rows, np.int64)
+    gids[order] = gid_sorted
+    rep_idx = order[changed]  # first row of each group, in group-id order
+    uniq = Table({k: table[k].take(jnp.asarray(rep_idx)) for k in keys})
+    return gids, uniq
+
+
+def _segment(fn: str, data: jnp.ndarray, gids: jnp.ndarray, n: int) -> jnp.ndarray:
+    if fn == "sum":
+        return jax.ops.segment_sum(data, gids, n)
+    if fn == "min":
+        return jax.ops.segment_min(data, gids, n)
+    if fn == "max":
+        return jax.ops.segment_max(data, gids, n)
+    raise ValueError(fn)
+
+
+def group_aggregate(
+    table: Table, keys: Sequence[str], aggs: Sequence[AggSpec]
+) -> Table:
+    """Eager hash aggregate."""
+    gids_np, uniq = factorize_groups(table, keys)
+    n_groups = int(gids_np.max()) + 1 if len(gids_np) else 0
+    if table.num_rows == 0:
+        # empty input: global aggregates still produce one row
+        if keys:
+            return Table({**uniq.columns, **{a.name: Column(jnp.zeros((0,))) for a in aggs}})
+        n_groups = 1
+        gids_np = np.zeros(0, np.int64)
+    if not keys:
+        n_groups = max(n_groups, 1)
+    gids = jnp.asarray(gids_np)
+
+    out: Dict[str, Column] = dict(uniq.columns)
+    counts = jax.ops.segment_sum(jnp.ones(table.num_rows), gids, n_groups)
+    for a in aggs:
+        if a.fn == "count_star":
+            out[a.name] = Column(counts.astype(jnp.int64), NUMERIC)
+            continue
+        col = evaluate(a.expr, table)
+        if a.fn == "count":
+            data = col.data.astype(jnp.int64)
+            ones = jnp.ones(table.num_rows, jnp.int64)
+            out[a.name] = Column(jax.ops.segment_sum(ones, gids, n_groups), NUMERIC)
+        elif a.fn in ("sum", "min", "max"):
+            data = col.data
+            if a.fn == "sum" and data.dtype.kind == "b":
+                data = data.astype(jnp.int64)
+            if a.fn == "sum" and data.dtype == jnp.float32:
+                data = data.astype(jnp.float64)
+            res = _segment(a.fn, data, gids, n_groups)
+            kind = col.kind if a.fn in ("min", "max") else NUMERIC
+            out[a.name] = Column(res, kind, col.dictionary if kind == STRING else None)
+        elif a.fn == "avg":
+            data = col.data.astype(jnp.float64)
+            s = jax.ops.segment_sum(data, gids, n_groups)
+            out[a.name] = Column(s / jnp.maximum(counts, 1.0), NUMERIC)
+        elif a.fn == "count_distinct":
+            vals = np.asarray(col.data)
+            pairs = np.stack([gids_np, vals.astype(np.int64)])
+            uniq_pairs = np.unique(pairs, axis=1)
+            cd = np.zeros(n_groups, np.int64)
+            np.add.at(cd, uniq_pairs[0], 1)
+            out[a.name] = Column(jnp.asarray(cd), NUMERIC)
+        else:
+            raise ValueError(f"unknown aggregate {a.fn}")
+    return Table(out)
+
+
+# ---------------------------------------------------------------------------
+# static-shape aggregate (jit / shard_map / kernel oracle)
+# ---------------------------------------------------------------------------
+
+
+def static_group_aggregate(
+    gids: jnp.ndarray,
+    valid: jnp.ndarray,
+    values: Dict[str, Tuple[str, jnp.ndarray]],
+    num_groups: int,
+):
+    """Masked scatter aggregation with a static group count.
+
+    ``values`` maps output name -> (fn, data array).  Rows with valid=False
+    contribute identity elements.  Returns dict of (num_groups,) arrays plus
+    ``__count`` (rows per group) and ``__present`` (group non-empty).
+    """
+    gids = jnp.where(valid, gids, num_groups)  # dump invalid rows past the end
+    out = {}
+    ones = valid.astype(jnp.float32)
+    counts = jax.ops.segment_sum(ones, gids, num_groups + 1)[:-1]
+    out["__count"] = counts
+    out["__present"] = counts > 0
+    for name, (fn, data) in values.items():
+        if fn in ("sum", "avg", "count"):
+            if fn == "count":
+                data = jnp.ones_like(data, jnp.float32)
+            contrib = jnp.where(valid, data.astype(jnp.float32), 0)
+            s = jax.ops.segment_sum(contrib, gids, num_groups + 1)[:-1]
+            out[name] = s / jnp.maximum(counts, 1) if fn == "avg" else s
+        elif fn == "min":
+            big = jnp.asarray(jnp.finfo(jnp.float32).max, data.dtype)
+            contrib = jnp.where(valid, data, big)
+            out[name] = jax.ops.segment_min(contrib, gids, num_groups + 1)[:-1]
+        elif fn == "max":
+            small = jnp.asarray(jnp.finfo(jnp.float32).min, data.dtype)
+            contrib = jnp.where(valid, data, small)
+            out[name] = jax.ops.segment_max(contrib, gids, num_groups + 1)[:-1]
+        else:
+            raise ValueError(fn)
+    return out

@@ -1,0 +1,354 @@
+"""Expression IR + vectorized evaluator.
+
+Expressions are evaluated column-at-a-time on device (jnp), the Sirius /
+libcudf execution style.  String predicates (LIKE, substring, prefix) are
+evaluated once against the host-side *dictionary* (small) and then become a
+device gather by code — the scoped "CPU fallback path" of the paper applied to
+dictionary preprocessing (DESIGN.md §2).
+
+All operations are elementwise / shape-preserving, so the same evaluator is
+used by both the eager path and the jit/static path (dictionaries fold into
+constants at trace time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .table import BOOL, DATE, NUMERIC, STRING, Column, Table, date_to_days
+
+
+class Expr:
+    """Base class for expression nodes."""
+
+    # operator sugar ------------------------------------------------------
+    def __add__(self, o): return BinOp("+", self, _wrap(o))
+    def __radd__(self, o): return BinOp("+", _wrap(o), self)
+    def __sub__(self, o): return BinOp("-", self, _wrap(o))
+    def __rsub__(self, o): return BinOp("-", _wrap(o), self)
+    def __mul__(self, o): return BinOp("*", self, _wrap(o))
+    def __rmul__(self, o): return BinOp("*", _wrap(o), self)
+    def __truediv__(self, o): return BinOp("/", self, _wrap(o))
+    def __eq__(self, o): return BinOp("==", self, _wrap(o))  # type: ignore[override]
+    def __ne__(self, o): return BinOp("!=", self, _wrap(o))  # type: ignore[override]
+    def __lt__(self, o): return BinOp("<", self, _wrap(o))
+    def __le__(self, o): return BinOp("<=", self, _wrap(o))
+    def __gt__(self, o): return BinOp(">", self, _wrap(o))
+    def __ge__(self, o): return BinOp(">=", self, _wrap(o))
+    def __and__(self, o): return BinOp("and", self, _wrap(o))
+    def __or__(self, o): return BinOp("or", self, _wrap(o))
+    def __invert__(self): return UnOp("not", self)
+    def __hash__(self):  # needed because __eq__ is overloaded
+        return id(self)
+
+    def columns(self) -> List[str]:
+        """Free column references (for projection pruning)."""
+        out: List[str] = []
+        _collect_columns(self, out)
+        return out
+
+
+def _wrap(v) -> "Expr":
+    if isinstance(v, Expr):
+        return v
+    return Lit(v)
+
+
+@dataclasses.dataclass(eq=False)
+class Col(Expr):
+    name: str
+
+
+@dataclasses.dataclass(eq=False)
+class Lit(Expr):
+    value: Any
+    kind: Optional[str] = None  # force interpretation, e.g. DATE
+
+    def resolved_kind(self) -> str:
+        if self.kind:
+            return self.kind
+        if isinstance(self.value, str):
+            return STRING
+        if isinstance(self.value, bool):
+            return BOOL
+        return NUMERIC
+
+
+def DateLit(s: str) -> Lit:
+    return Lit(date_to_days(s), DATE)
+
+
+@dataclasses.dataclass(eq=False)
+class BinOp(Expr):
+    op: str
+    left: Expr
+    right: Expr
+
+
+@dataclasses.dataclass(eq=False)
+class UnOp(Expr):
+    op: str
+    operand: Expr
+
+
+@dataclasses.dataclass(eq=False)
+class Between(Expr):
+    operand: Expr
+    lo: Expr
+    hi: Expr
+
+
+@dataclasses.dataclass(eq=False)
+class InList(Expr):
+    operand: Expr
+    values: Sequence[Any]
+    negate: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class Like(Expr):
+    operand: Expr
+    pattern: str
+    negate: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class Case(Expr):
+    whens: Sequence[Tuple[Expr, Expr]]
+    default: Expr
+
+
+@dataclasses.dataclass(eq=False)
+class ExtractYear(Expr):
+    operand: Expr
+
+
+@dataclasses.dataclass(eq=False)
+class Substr(Expr):
+    """SQL substring(col, start, length) — 1-based, host dictionary rewrite."""
+    operand: Expr
+    start: int
+    length: int
+
+
+@dataclasses.dataclass(eq=False)
+class Cast(Expr):
+    operand: Expr
+    dtype: str  # "float64" | "float32" | "int64" | "int32"
+
+
+def _collect_columns(e: Expr, out: List[str]) -> None:
+    if isinstance(e, Col):
+        out.append(e.name)
+    elif isinstance(e, BinOp):
+        _collect_columns(e.left, out); _collect_columns(e.right, out)
+    elif isinstance(e, UnOp):
+        _collect_columns(e.operand, out)
+    elif isinstance(e, Between):
+        for x in (e.operand, e.lo, e.hi):
+            _collect_columns(x, out)
+    elif isinstance(e, (InList, Like, ExtractYear, Substr, Cast)):
+        _collect_columns(e.operand, out)
+    elif isinstance(e, Case):
+        for c, v in e.whens:
+            _collect_columns(c, out); _collect_columns(v, out)
+        _collect_columns(e.default, out)
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+_ARITH = {"+": jnp.add, "-": jnp.subtract, "*": jnp.multiply, "/": jnp.divide}
+_CMP = {"==": jnp.equal, "!=": jnp.not_equal, "<": jnp.less,
+        "<=": jnp.less_equal, ">": jnp.greater, ">=": jnp.greater_equal}
+
+
+def like_to_regex(pattern: str) -> re.Pattern:
+    out = []
+    for ch in pattern:
+        if ch == "%":
+            out.append(".*")
+        elif ch == "_":
+            out.append(".")
+        else:
+            out.append(re.escape(ch))
+    return re.compile("^" + "".join(out) + "$", re.DOTALL)
+
+
+def _string_lit_cmp(col: Column, op: str, lit: str) -> Column:
+    """Compare a dict-encoded string column with a string literal.
+
+    The dictionary is sorted, so codes are ranks: integer comparison against
+    the literal's insertion point is exact lexicographic comparison.
+    """
+    d = col.dictionary
+    left = int(np.searchsorted(d, lit, side="left"))
+    present = left < len(d) and d[left] == lit
+    codes = col.data
+    if op == "==":
+        return Column(codes == left if present else jnp.zeros_like(codes, bool), BOOL)
+    if op == "!=":
+        return Column(codes != left if present else jnp.ones_like(codes, bool), BOOL)
+    if op == "<":
+        return Column(codes < left, BOOL)
+    if op == ">=":
+        return Column(codes >= left, BOOL)
+    if op == "<=":
+        # <= lit  ⇔  < upper insertion point
+        right = int(np.searchsorted(d, lit, side="right"))
+        return Column(codes < right, BOOL)
+    if op == ">":
+        right = int(np.searchsorted(d, lit, side="right"))
+        return Column(codes >= right, BOOL)
+    raise ValueError(f"bad string comparison {op}")
+
+
+def evaluate(expr: Expr, table: Table) -> Column:
+    """Evaluate ``expr`` against ``table`` → Column (device array)."""
+    if isinstance(expr, Col):
+        return table[expr.name]
+
+    if isinstance(expr, Lit):
+        n = table.num_rows
+        k = expr.resolved_kind()
+        if k == STRING:
+            raise ValueError("bare string literal column not supported; use comparisons")
+        val = expr.value
+        dt = jnp.float64 if isinstance(val, float) else None
+        return Column(jnp.full((n,), val, dtype=dt), k)
+
+    if isinstance(expr, BinOp):
+        if expr.op in ("and", "or"):
+            l = evaluate(expr.left, table).data
+            r = evaluate(expr.right, table).data
+            fn = jnp.logical_and if expr.op == "and" else jnp.logical_or
+            return Column(fn(l, r), BOOL)
+
+        # string vs literal comparisons take the dictionary path
+        if expr.op in _CMP:
+            le, re_ = expr.left, expr.right
+            if isinstance(re_, Lit) and re_.resolved_kind() == STRING:
+                lc = evaluate(le, table)
+                if lc.kind == STRING:
+                    return _string_lit_cmp(lc, expr.op, re_.value)
+            if isinstance(le, Lit) and le.resolved_kind() == STRING:
+                rc = evaluate(re_, table)
+                if rc.kind == STRING:
+                    return _string_lit_cmp(rc, _flip(expr.op), le.value)
+
+        l = evaluate(expr.left, table)
+        r = evaluate(expr.right, table)
+        if l.kind == STRING and r.kind == STRING:
+            # column-vs-column string compare: unify dictionaries first
+            from .table import unify_string_keys
+            l, r = unify_string_keys(l, r)
+        if expr.op in _CMP:
+            return Column(_CMP[expr.op](l.data, r.data), BOOL)
+        if expr.op in _ARITH:
+            ld, rd = l.data, r.data
+            if expr.op == "/":
+                ld = ld.astype(jnp.float64)
+            out_kind = DATE if (l.kind == DATE or r.kind == DATE) and expr.op in ("+", "-") else NUMERIC
+            if l.kind == DATE and r.kind == DATE:
+                out_kind = NUMERIC  # date difference = days
+            return Column(_ARITH[expr.op](ld, rd), out_kind)
+        raise ValueError(f"unknown binop {expr.op}")
+
+    if isinstance(expr, UnOp):
+        v = evaluate(expr.operand, table)
+        if expr.op == "not":
+            return Column(jnp.logical_not(v.data), BOOL)
+        if expr.op == "-":
+            return Column(jnp.negative(v.data), v.kind)
+        raise ValueError(f"unknown unop {expr.op}")
+
+    if isinstance(expr, Between):
+        v = evaluate(expr.operand, table)
+        lo = evaluate(expr.lo, table) if not isinstance(expr.lo, Lit) else None
+        # inline literal bounds to keep jit graphs small
+        lo_d = lo.data if lo is not None else jnp.asarray(expr.lo.value)
+        hi = evaluate(expr.hi, table) if not isinstance(expr.hi, Lit) else None
+        hi_d = hi.data if hi is not None else jnp.asarray(expr.hi.value)
+        return Column((v.data >= lo_d) & (v.data <= hi_d), BOOL)
+
+    if isinstance(expr, InList):
+        v = evaluate(expr.operand, table)
+        if v.kind == STRING:
+            d = v.dictionary
+            mask_over_dict = np.isin(d, np.asarray(list(expr.values), dtype=d.dtype))
+            hit = jnp.asarray(mask_over_dict)[v.data]
+        else:
+            hit = jnp.zeros(v.data.shape, bool)
+            for val in expr.values:
+                hit = hit | (v.data == val)
+        if expr.negate:
+            hit = jnp.logical_not(hit)
+        return Column(hit, BOOL)
+
+    if isinstance(expr, Like):
+        v = evaluate(expr.operand, table)
+        if v.kind != STRING:
+            raise ValueError("LIKE on non-string column")
+        rx = like_to_regex(expr.pattern)
+        over_dict = np.fromiter(
+            (rx.match(s) is not None for s in v.dictionary), bool, len(v.dictionary)
+        )
+        hit = jnp.asarray(over_dict)[v.data]
+        if expr.negate:
+            hit = jnp.logical_not(hit)
+        return Column(hit, BOOL)
+
+    if isinstance(expr, Case):
+        default = evaluate(expr.default, table)
+        out = default.data
+        kind = default.kind
+        for cond, val in reversed(list(expr.whens)):
+            c = evaluate(cond, table).data
+            vv = evaluate(val, table)
+            out = jnp.where(c, vv.data, out)
+            kind = vv.kind
+        return Column(out, kind)
+
+    if isinstance(expr, ExtractYear):
+        v = evaluate(expr.operand, table)
+        if v.kind != DATE:
+            raise ValueError("extract(year) on non-date")
+        return Column(_year_from_days(v.data), NUMERIC)
+
+    if isinstance(expr, Substr):
+        v = evaluate(expr.operand, table)
+        if v.kind != STRING:
+            raise ValueError("substr on non-string")
+        subs = np.asarray(
+            [s[expr.start - 1 : expr.start - 1 + expr.length] for s in v.dictionary]
+        )
+        new_dict, remap = np.unique(subs, return_inverse=True)
+        return Column(jnp.asarray(remap.astype(np.int32))[v.data], STRING, new_dict)
+
+    if isinstance(expr, Cast):
+        v = evaluate(expr.operand, table)
+        return Column(v.data.astype(jnp.dtype(expr.dtype)), NUMERIC)
+
+    raise TypeError(f"cannot evaluate {type(expr)}")
+
+
+def _flip(op: str) -> str:
+    return {"==": "==", "!=": "!=", "<": ">", ">": "<", "<=": ">=", ">=": "<="}[op]
+
+
+def _year_from_days(days):
+    """Civil year from days since 1970-01-01 (Howard Hinnant's algorithm)."""
+    z = days.astype(jnp.int32) + 719468
+    era = jnp.where(z >= 0, z, z - 146096) // 146097
+    doe = z - era * 146097
+    yoe = (doe - doe // 1460 + doe // 36524 - doe // 146096) // 365
+    y = yoe + era * 400
+    doy = doe - (365 * yoe + yoe // 4 - yoe // 100)
+    mp = (5 * doy + 2) // 153
+    m = jnp.where(mp < 10, mp + 3, mp - 9)
+    return jnp.where(m <= 2, y + 1, y).astype(jnp.int32)

@@ -1,0 +1,239 @@
+"""Join operators.
+
+Two implementations, per DESIGN.md §2:
+
+* ``hash_join`` — the **eager** path (dynamic output size, host-dispatched like
+  libcudf's stream model).  Internally sort-merge on factorized keys, which is
+  exact for arbitrary multiplicity and doubles as the correctness oracle.
+  Supports inner / left / semi / anti / mark.
+
+* ``StaticHashTable`` — the **static-shape** path used inside jit /
+  shard_map / Pallas: an atomics-free open-addressing table built with
+  deterministic multi-round masked scatter (TPU has no CAS), probed with
+  linear probing.  Build keys must be unique (PK side) — TPC-H joins are
+  PK-FK; multi-match plans are rewritten to semi/anti/mark + aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import BOOL, NUMERIC, STRING, Column, Table, unify_string_keys
+
+# ---------------------------------------------------------------------------
+# key factorization (multi-column keys -> single int64 key)
+# ---------------------------------------------------------------------------
+
+
+def _as_int_keys(left: Column, right: Column) -> Tuple[np.ndarray, np.ndarray]:
+    """Bring a (probe, build) key column pair into a shared integer space."""
+    if left.kind == STRING or right.kind == STRING:
+        left, right = unify_string_keys(left, right)
+    l = np.asarray(left.data)
+    r = np.asarray(right.data)
+    if l.dtype.kind == "f" or r.dtype.kind == "f":
+        # factorize floats exactly via unique over the union
+        uni = np.unique(np.concatenate([l, r]))
+        l = np.searchsorted(uni, l)
+        r = np.searchsorted(uni, r)
+    return l.astype(np.int64), r.astype(np.int64)
+
+
+def combine_keys(
+    probe_cols: Sequence[Column], build_cols: Sequence[Column]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack multi-column join keys into one int64 key per row (exact)."""
+    assert len(probe_cols) == len(build_cols) and probe_cols
+    pk, bk = _as_int_keys(probe_cols[0], build_cols[0])
+    base_min = min(pk.min(initial=0), bk.min(initial=0))
+    pk, bk = pk - base_min, bk - base_min
+    for pc, bc in zip(probe_cols[1:], build_cols[1:]):
+        p2, b2 = _as_int_keys(pc, bc)
+        m = min(p2.min(initial=0), b2.min(initial=0))
+        p2, b2 = p2 - m, b2 - m
+        card = int(max(p2.max(initial=0), b2.max(initial=0))) + 1
+        hi = int(max(pk.max(initial=0), bk.max(initial=0)))
+        if hi * card > 2**62:
+            # re-factorize to dense ranks to avoid overflow
+            uni = np.unique(np.concatenate([pk, bk]))
+            pk = np.searchsorted(uni, pk)
+            bk = np.searchsorted(uni, bk)
+        pk = pk * card + p2
+        bk = bk * card + b2
+    return pk, bk
+
+
+# ---------------------------------------------------------------------------
+# eager join (dynamic shapes)
+# ---------------------------------------------------------------------------
+
+
+def hash_join(
+    probe: Table,
+    build: Table,
+    probe_keys: Sequence[str],
+    build_keys: Sequence[str],
+    how: str = "inner",
+    mark_name: str = "__mark",
+) -> Table:
+    """Join ``probe`` against ``build``.
+
+    how = inner | left | semi | anti | mark.
+    ``left`` adds a ``__matched`` BOOL column; build columns of unmatched rows
+    are garbage (gathered at index 0) and must be guarded by ``__matched``.
+    ``mark`` returns the probe table + BOOL ``mark_name`` column (EXISTS / IN).
+    """
+    pk, bk = combine_keys([probe[k] for k in probe_keys], [build[k] for k in build_keys])
+
+    order = np.argsort(bk, kind="stable")
+    bk_sorted = bk[order]
+    lo = np.searchsorted(bk_sorted, pk, side="left")
+    hi = np.searchsorted(bk_sorted, pk, side="right")
+    counts = hi - lo
+
+    if how == "mark":
+        return probe.with_column(mark_name, Column(jnp.asarray(counts > 0), BOOL))
+    if how == "semi":
+        return probe.take(jnp.asarray(np.nonzero(counts > 0)[0]))
+    if how == "anti":
+        return probe.take(jnp.asarray(np.nonzero(counts == 0)[0]))
+
+    if how == "left":
+        counts_out = np.maximum(counts, 1)
+    elif how == "inner":
+        counts_out = counts
+    else:
+        raise ValueError(f"unknown join type {how}")
+
+    total = int(counts_out.sum())
+    probe_idx = np.repeat(np.arange(len(pk)), counts_out)
+    # position within each probe row's match run
+    starts = np.zeros(len(pk), dtype=np.int64)
+    np.cumsum(counts_out[:-1], out=starts[1:])
+    intra = np.arange(total) - np.repeat(starts, counts_out)
+    build_pos = lo[probe_idx] + intra
+    matched = counts[probe_idx] > 0
+    build_pos = np.where(matched, np.clip(build_pos, 0, max(len(bk) - 1, 0)), 0)
+    build_idx = order[build_pos] if len(bk) else np.zeros(total, dtype=np.int64)
+
+    out = {}
+    for name, col in probe.columns.items():
+        out[name] = col.take(jnp.asarray(probe_idx))
+    for name, col in build.columns.items():
+        if name in out:  # key columns equal by definition; keep probe copy
+            continue
+        out[name] = col.take(jnp.asarray(build_idx))
+    if how == "left":
+        out["__matched"] = Column(jnp.asarray(matched), BOOL)
+    return Table(out)
+
+
+# ---------------------------------------------------------------------------
+# static-shape open-addressing hash table (jit / shard_map / kernel oracle)
+# ---------------------------------------------------------------------------
+
+_MIX = np.int64(-7046029254386353131)  # 0x9E3779B97F4A7C15 as signed int64
+EMPTY = jnp.int32(-1)
+
+
+def _hash(keys: jnp.ndarray, mask: int) -> jnp.ndarray:
+    h = (keys.astype(jnp.int64) * _MIX)
+    h = h ^ (h >> 29)
+    return (h & mask).astype(jnp.int32)
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 4)
+
+
+@dataclasses.dataclass
+class StaticHashTable:
+    """Open-addressing table over unique int keys; fully static shapes.
+
+    slots_key[i]  = key stored in slot i (or -1)
+    slots_row[i]  = build-side row index for that key (or -1)
+    Built with deterministic multi-round masked scatter (no atomics):
+    every unplaced key scatters its row id into its current candidate slot
+    with ``.at[].max``; winners are the rows that read their own id back.
+    """
+
+    slots_key: jnp.ndarray
+    slots_row: jnp.ndarray
+    capacity: int
+    max_probes: int
+    all_placed: Optional[jnp.ndarray] = None  # bool scalar; debug/assert aid
+
+    @staticmethod
+    def build(keys: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
+              capacity: Optional[int] = None, max_probes: int = 32) -> "StaticHashTable":
+        n = keys.shape[0]
+        cap = capacity or next_pow2(2 * n)
+        mask = cap - 1
+        keys = keys.astype(jnp.int64)
+        rows = jnp.arange(n, dtype=jnp.int32)
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+
+        slots_row = jnp.full((cap,), -1, jnp.int32)
+        placed = ~valid  # invalid rows are "already placed" (i.e. skipped)
+        h0 = _hash(keys, mask)
+
+        def round_body(i, state):
+            slots_row, placed = state
+            cand = ((h0 + i) & mask).astype(jnp.int32)
+            # Contenders scatter-max their row id into a scratch table; the
+            # scratch is merged only into slots that are still empty, so
+            # earlier winners are never displaced (atomics-free CAS analogue).
+            attempt = jnp.where(placed, -1, rows)
+            bids = jnp.full((cap,), -1, jnp.int32).at[cand].max(attempt)
+            empty = slots_row == -1
+            slots_row = jnp.where(empty & (bids >= 0), bids, slots_row)
+            won = (~placed) & (slots_row[cand] == rows)
+            placed = placed | won
+            return slots_row, placed
+
+        slots_row, placed = jax.lax.fori_loop(
+            0, max_probes, round_body, (slots_row, placed))
+        slots_key = jnp.where(
+            slots_row >= 0, keys[jnp.clip(slots_row, 0, n - 1)], jnp.int64(-1))
+        return StaticHashTable(slots_key, slots_row, cap, max_probes,
+                               jnp.all(placed))
+
+    def lookup(self, probe_keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """→ (build_row_idx int32 [-1 if none], found bool). Fully vectorized."""
+        mask = self.capacity - 1
+        keys = probe_keys.astype(jnp.int64)
+        h0 = _hash(keys, mask)
+
+        def body(i, state):
+            found_row, done = state
+            cand = ((h0 + i) & mask).astype(jnp.int32)
+            k = self.slots_key[cand]
+            r = self.slots_row[cand]
+            hit = (~done) & (k == keys) & (r >= 0)
+            miss_empty = (~done) & (r == -1)  # empty slot ⇒ key absent
+            found_row = jnp.where(hit, r, found_row)
+            done = done | hit | miss_empty
+            return found_row, done
+
+        found_row = jnp.full(keys.shape, -1, jnp.int32)
+        done = jnp.zeros(keys.shape, bool)
+        found_row, done = jax.lax.fori_loop(
+            0, self.max_probes, body, (found_row, done))
+        return found_row, found_row >= 0
+
+
+def static_join_gather(
+    probe_data: dict, build_data: dict, row_idx: jnp.ndarray, found: jnp.ndarray
+):
+    """Gather build columns alongside probe columns under a match mask."""
+    safe = jnp.clip(row_idx, 0, None)
+    out = dict(probe_data)
+    for name, arr in build_data.items():
+        if name not in out:
+            out[name] = jnp.take(arr, safe, axis=0)
+    return out, found

@@ -1,0 +1,59 @@
+"""Order-by / top-k.
+
+Eager path: host lexsort on decoded sort keys (order-preserving dictionary
+codes make string sorts integer sorts).  Sort inputs in TPC-H are tiny
+(post-aggregation), matching the paper's observation that order-by never
+dominates; the eager host sort mirrors libcudf's materialize-then-sort.
+
+Static path: ``static_topk`` — mask-aware top-k on a single packed key for
+compiled fragments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import Column, Table
+
+
+@dataclasses.dataclass
+class SortKey:
+    name: str
+    ascending: bool = True
+
+
+def sort_table(table: Table, keys: Sequence[SortKey], limit: int | None = None) -> Table:
+    if table.num_rows == 0:
+        return table
+    arrays: List[np.ndarray] = []
+    for k in keys:
+        col = table[k.name]
+        a = np.asarray(col.data)
+        if a.dtype.kind == "b":
+            a = a.astype(np.int8)
+        if not k.ascending:
+            if a.dtype.kind == "f":
+                a = -a
+            else:
+                a = -(a.astype(np.int64))
+        arrays.append(a)
+    # np.lexsort: last key is primary
+    order = np.lexsort(tuple(reversed(arrays)))
+    if limit is not None:
+        order = order[:limit]
+    return table.take(jnp.asarray(order))
+
+
+def static_topk(packed_key: jnp.ndarray, valid: jnp.ndarray, k: int):
+    """Top-k smallest packed keys among valid rows → (indices, valid_out)."""
+    big = jnp.iinfo(packed_key.dtype).max if packed_key.dtype.kind == "i" else jnp.inf
+    masked = jnp.where(valid, packed_key, big)
+    # top_k finds largest; negate for ascending order
+    neg = -(masked.astype(jnp.float32)) if masked.dtype.kind == "f" else -masked
+    _, idx = jax.lax.top_k(neg, k)
+    taken_valid = jnp.take(valid, idx)
+    return idx, taken_valid

@@ -1,0 +1,250 @@
+"""Columnar Table abstraction — the Arrow-derived format of Sirius (§3.2.3).
+
+Sirius keeps three columnar formats (internal / libcudf / host-DB) that are
+zero-copy convertible because all derive from Apache Arrow.  Here the internal
+format is a dict of device (jnp) arrays; the "host database" format is numpy.
+Conversion device<->host is explicit (``Table.to_host`` / ``Table.to_device``)
+and accounted by the buffer manager, mirroring the paper's cold-run deep copy.
+
+TPU adaptation (see DESIGN.md §2):
+  * strings are order-preserving dictionary encoded at load time: codes are the
+    rank of the string in the sorted dictionary, so integer comparison on codes
+    is exactly lexicographic comparison on strings;
+  * dates are int32 days since 1970-01-01;
+  * decimals are float64 (TPC-H tolerance 1e-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The analytical engine needs exact int64 join keys and float64 accumulation
+# (TPC-H money).  Enable x64 before any array is created.  LM-side modules are
+# dtype-explicit (bf16/f32) and unaffected.
+jax.config.update("jax_enable_x64", True)
+
+Array = Union[np.ndarray, jnp.ndarray]
+
+# Logical column kinds.
+NUMERIC = "numeric"
+STRING = "string"
+DATE = "date"
+BOOL = "bool"
+
+_EPOCH = np.datetime64("1970-01-01", "D")
+
+
+def date_to_days(s: str) -> int:
+    """'1995-03-15' -> int32 days since epoch."""
+    return int((np.datetime64(s, "D") - _EPOCH).astype(np.int64))
+
+
+def days_to_date(d: int) -> str:
+    return str(_EPOCH + np.timedelta64(int(d), "D"))
+
+
+@dataclasses.dataclass
+class Column:
+    """A single column: device data + (for strings) a host-side dictionary.
+
+    ``data``       device array (codes for strings, days for dates)
+    ``kind``       NUMERIC | STRING | DATE | BOOL
+    ``dictionary`` sorted np.ndarray of python strings (STRING only)
+    """
+
+    data: Array
+    kind: str = NUMERIC
+    dictionary: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.kind == STRING and self.dictionary is None:
+            raise ValueError("string column requires a dictionary")
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def from_strings(values: Sequence[str]) -> "Column":
+        arr = np.asarray(values, dtype=object)
+        dictionary, codes = np.unique(arr.astype(str), return_inverse=True)
+        return Column(jnp.asarray(codes.astype(np.int32)), STRING, dictionary)
+
+    @staticmethod
+    def from_dates(values: Sequence[str]) -> "Column":
+        days = (np.asarray(values, dtype="datetime64[D]") - _EPOCH).astype(np.int32)
+        return Column(jnp.asarray(days), DATE)
+
+    @staticmethod
+    def from_numpy(arr: np.ndarray) -> "Column":
+        if arr.dtype.kind in ("U", "S", "O"):
+            return Column.from_strings(arr)
+        if arr.dtype.kind == "M":
+            days = (arr.astype("datetime64[D]") - _EPOCH).astype(np.int32)
+            return Column(jnp.asarray(days), DATE)
+        if arr.dtype == np.bool_:
+            return Column(jnp.asarray(arr), BOOL)
+        if arr.dtype == np.float64:
+            return Column(jnp.asarray(arr, dtype=jnp.float64), NUMERIC)
+        return Column(jnp.asarray(arr), NUMERIC)
+
+    # -- basics ------------------------------------------------------------
+    def __len__(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape)) * self.data.dtype.itemsize
+
+    def take(self, idx: Array) -> "Column":
+        return Column(jnp.take(self.data, idx, axis=0), self.kind, self.dictionary)
+
+    def to_host(self) -> np.ndarray:
+        """Decode to the host-database representation (deep copy)."""
+        host = np.asarray(self.data)
+        if self.kind == STRING:
+            return self.dictionary[host]
+        if self.kind == DATE:
+            return _EPOCH + host.astype("timedelta64[D]")
+        return host
+
+    def decode(self) -> np.ndarray:
+        return self.to_host()
+
+    # -- dictionary bridging (string join keys across tables) ---------------
+    def recode_to(self, target_dictionary: np.ndarray) -> "Column":
+        """Map this column's codes into another dictionary's code space.
+
+        Codes not present in the target dictionary map to -1 (never matches).
+        This is the host-side 'dictionary bridge' used when joining string
+        columns encoded against different dictionaries (DESIGN.md §2).
+        """
+        if self.kind != STRING:
+            raise ValueError("recode_to only applies to string columns")
+        pos = np.searchsorted(target_dictionary, self.dictionary)
+        pos = np.clip(pos, 0, len(target_dictionary) - 1)
+        ok = target_dictionary[pos] == self.dictionary
+        mapping = np.where(ok, pos, -1).astype(np.int32)
+        return Column(jnp.asarray(mapping)[self.data], STRING, target_dictionary)
+
+
+class Table:
+    """An ordered collection of equal-length Columns."""
+
+    def __init__(self, columns: Dict[str, Column]):
+        self.columns: Dict[str, Column] = dict(columns)
+        lengths = {len(c) for c in self.columns.values()}
+        if len(lengths) > 1:
+            raise ValueError(f"ragged table: {lengths}")
+        self._num_rows = lengths.pop() if lengths else 0
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def from_pydict(data: Dict[str, Union[np.ndarray, list]]) -> "Table":
+        cols = {}
+        for name, values in data.items():
+            if isinstance(values, Column):
+                cols[name] = values
+            else:
+                arr = np.asarray(values)
+                cols[name] = Column.from_numpy(arr)
+        return Table(cols)
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self._num_rows
+
+    @property
+    def column_names(self) -> List[str]:
+        return list(self.columns.keys())
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.columns.values())
+
+    def __getitem__(self, name: str) -> Column:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    # -- relational primitives (shared by operators) -------------------------
+    def select(self, names: Sequence[str]) -> "Table":
+        return Table({n: self.columns[n] for n in names})
+
+    def rename(self, mapping: Dict[str, str]) -> "Table":
+        return Table({mapping.get(n, n): c for n, c in self.columns.items()})
+
+    def with_column(self, name: str, col: Column) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = col
+        return Table(cols)
+
+    def drop(self, names: Sequence[str]) -> "Table":
+        return Table({n: c for n, c in self.columns.items() if n not in names})
+
+    def take(self, idx: Array) -> "Table":
+        return Table({n: c.take(idx) for n, c in self.columns.items()})
+
+    def head(self, n: int) -> "Table":
+        return self.take(jnp.arange(min(n, self.num_rows)))
+
+    def filter_mask(self, mask: Array) -> "Table":
+        """Eager compaction (the libcudf apply_boolean_mask analogue)."""
+        idx = jnp.nonzero(np.asarray(mask))[0]
+        return self.take(idx)
+
+    @staticmethod
+    def concat(tables: Sequence["Table"]) -> "Table":
+        tables = [t for t in tables if t.num_rows >= 0]
+        if not tables:
+            return Table({})
+        names = tables[0].column_names
+        out = {}
+        for n in names:
+            kind = tables[0][n].kind
+            if kind == STRING:
+                # merge dictionaries
+                merged = np.unique(np.concatenate([t[n].dictionary for t in tables]))
+                parts = [t[n].recode_to(merged).data for t in tables]
+                out[n] = Column(jnp.concatenate(parts), STRING, merged)
+            else:
+                out[n] = Column(
+                    jnp.concatenate([t[n].data for t in tables]), kind,
+                )
+        return Table(out)
+
+    # -- host conversion ------------------------------------------------------
+    def to_host(self) -> Dict[str, np.ndarray]:
+        return {n: c.to_host() for n, c in self.columns.items()}
+
+    def to_pylist(self) -> List[dict]:
+        host = self.to_host()
+        return [
+            {n: host[n][i] for n in self.column_names} for i in range(self.num_rows)
+        ]
+
+    def __repr__(self) -> str:
+        cols = ", ".join(
+            f"{n}:{c.kind}[{c.data.dtype}]" for n, c in self.columns.items()
+        )
+        return f"Table({self.num_rows} rows; {cols})"
+
+
+def unify_string_keys(left: Column, right: Column):
+    """Re-encode two string columns into one shared dictionary for joins."""
+    if left.kind != STRING or right.kind != STRING:
+        return left, right
+    if left.dictionary is right.dictionary or (
+        len(left.dictionary) == len(right.dictionary)
+        and np.array_equal(left.dictionary, right.dictionary)
+    ):
+        return left, right
+    merged = np.unique(np.concatenate([left.dictionary, right.dictionary]))
+    return left.recode_to(merged), right.recode_to(merged)

@@ -1,0 +1,153 @@
+"""Train step assembly + sharding rules for the production mesh.
+
+`make_train_step(cfg)` returns a pure (state, batch) -> (state, metrics)
+function; `sharding_rules` maps every param/state leaf to a PartitionSpec for
+GSPMD (FSDP over 'data' x TP over 'model'; the optional leading scan/expert
+dims stay unsharded or go to 'model' for experts).  The multi-pod mesh adds a
+'pod' axis folded into data parallelism.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def init_train_state(rng, cfg: ArchConfig):
+    params = lm.init_params(rng, cfg)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[OptConfig] = None):
+    opt_cfg = opt_cfg or OptConfig()
+
+    def train_step(state, batch):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch)
+
+        l, grads = jax.value_and_grad(loss)(state["params"])
+        new_params, new_opt, gnorm = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = {"loss": l, "grad_norm": gnorm}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (GSPMD): path-pattern → PartitionSpec
+# ---------------------------------------------------------------------------
+
+_DATA = "data"
+_MODEL = "model"
+
+
+def _spec_for(path: str, ndim: int, fsdp_axes) -> P:
+    """Name-based rules; `extra` leading dims (scan periods / experts) map to
+    None.  fsdp_axes=None gives TP-only sharding (serving); on the multi-pod
+    mesh fsdp_axes=('pod','data') folds the pod axis into FSDP."""
+    d = fsdp_axes if fsdp_axes else None
+    leaf = path.split("/")[-1]
+
+    def pad(spec_tail):
+        return P(*([None] * (ndim - len(spec_tail)) + list(spec_tail)))
+
+    if leaf in ("embed",):
+        return P(_MODEL, None)                      # vocab-sharded
+    if leaf in ("head",):
+        return P(None, _MODEL) if ndim == 2 else pad([None, _MODEL])
+    if leaf in ("wq", "wk", "wv", "wg", "wu", "win", "wx", "router",
+                "wdkv", "wuk", "wuv", "w1"):
+        return pad([d, _MODEL])                     # col-parallel
+    if leaf in ("wo", "wd", "wout", "wdt", "w2"):
+        return pad([_MODEL, d])                     # row-parallel
+    if leaf in ("bq", "bk", "bv"):
+        return pad([_MODEL])
+    if leaf in ("conv",):
+        return pad([None, _MODEL])
+    if leaf in ("dt_bias", "d_skip"):
+        return pad([_MODEL])
+    if leaf in ("a_log",):
+        return pad([_MODEL, None])
+    if leaf in ("enc_pos", "dec_pos"):
+        return pad([None, None])
+    # norms and scalars: replicated (leading scan dims included)
+    return P(*([None] * ndim))
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def param_shardings(params, mesh, fsdp: bool = True,
+                    n_experts: Optional[int] = None):
+    """Pytree of NamedShardings mirroring `params` (also used for opt state).
+
+    MoE expert tensors (..., E, d, ff): experts sharded over 'model' (EP) and
+    rows over the fsdp axes.  Disambiguated from scanned dense FFN weights by
+    matching the expert-count dim (`n_experts`).
+    """
+    from jax.sharding import NamedSharding
+
+    fsdp_axes = None
+    if fsdp:
+        axes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+        fsdp_axes = axes if len(axes) > 1 else axes[0]
+
+    def leaf_spec(path, x):
+        leaf = path.split("/")[-1]
+        nd = x.ndim
+        base = path.split("/")
+        if (leaf in ("wg", "wu", "wd") and nd >= 3 and "ffn" in base
+                and n_experts is not None and x.shape[-3] == n_experts):
+            # expert-parallel: (..., E, d, ff) → experts on 'model'
+            tail = [_MODEL, fsdp_axes, None]
+            return P(*([None] * (nd - 3) + tail))
+        return _spec_for(path, nd, fsdp_axes)
+
+    flat = list(_walk(params))
+    specs = {path: leaf_spec(path, x) for path, x in flat}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            out = [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(out)
+        return NamedSharding(mesh, specs[prefix])
+
+    return rebuild(params)
+
+
+def state_shardings(state, mesh, fsdp: bool = True,
+                    n_experts: Optional[int] = None):
+    from jax.sharding import NamedSharding
+    p = param_shardings(state["params"], mesh, fsdp, n_experts)
+    return {"params": p,
+            "opt": {"mu": p, "nu": p,
+                    "step": NamedSharding(mesh, P())}}
+
+
+def batch_shardings(batch_struct, mesh):
+    """Batch dims shard over ('pod','data') when the pod axis exists."""
+    from jax.sharding import NamedSharding
+    axes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    data_axes = axes if len(axes) > 1 else axes[0]
+
+    def spec(x):
+        return NamedSharding(mesh, P(data_axes, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(spec, batch_struct)

@@ -1,0 +1,118 @@
+"""Subprocess worker for distributed tests (needs 8 forced host devices).
+
+Usage: python tests/_dist_worker.py <scenario>
+Prints a JSON verdict on the last line.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.distributed import DistributedEngine  # noqa: E402
+from repro.core.fallback import FallbackEngine  # noqa: E402
+from repro.data.tpch import generate  # noqa: E402
+from repro.data.tpch_queries import QUERIES  # noqa: E402
+from repro.runtime.control import FaultInjector, FaultPlan  # noqa: E402
+
+
+def canon(v):
+    v = np.asarray(v)
+    if v.dtype.kind == "M":
+        return v.astype("datetime64[D]").astype("int64")
+    if v.dtype.kind in "UO":
+        return np.asarray(v, "U")
+    return v
+
+
+def tables_match(got, ref):
+    for k in got:
+        a, b = canon(got[k]), canon(ref[k])
+        if len(a) != len(b):
+            return False, f"{k}: rows {len(a)} vs {len(b)}"
+        if a.dtype.kind == "f" or b.dtype.kind == "f":
+            if not np.allclose(a.astype(float), b.astype(float),
+                               rtol=1e-6, atol=1e-6):
+                return False, f"{k}: values"
+        elif not (a == b).all():
+            return False, f"{k}: values"
+    return True, ""
+
+
+def main():
+    scenario = sys.argv[1]
+    db = generate(0.005)
+    fb = FallbackEngine(db)
+    verdict = {"scenario": scenario, "ok": False}
+
+    if scenario == "correctness":
+        eng = DistributedEngine(db, n_shards=8)
+        oks = []
+        for qid in (1, 3, 6, 12):
+            got = eng.run_query(qid)
+            ref = fb.execute(QUERIES[qid]())
+            ok, why = tables_match(got, ref)
+            oks.append(ok)
+            if not ok:
+                verdict["why"] = f"Q{qid} {why}"
+        verdict["ok"] = all(oks)
+
+    elif scenario == "node_failure_elastic":
+        inj = FaultInjector([FaultPlan(fragment="q3_join", node=3, times=1)])
+        eng = DistributedEngine(db, n_shards=8, injector=inj)
+        got = eng.run_query(3)
+        ref = fb.execute(QUERIES[3]())
+        ok, why = tables_match(got, ref)
+        verdict["ok"] = (ok and eng.recoveries == 1 and eng.n_shards == 7
+                         and inj.tripped == ["q3_join"])
+        verdict["recoveries"] = eng.recoveries
+        verdict["n_shards_after"] = eng.n_shards
+        verdict["why"] = why
+
+    elif scenario == "straggler_speculation":
+        inj = FaultInjector([FaultPlan(fragment="q3_join", node=2, times=1,
+                                       delay_s=30.0)])
+        eng = DistributedEngine(db, n_shards=8, injector=inj)
+        eng.run_query(3)  # warm (history for budget)
+        got = eng.run_query(3)
+        ref = fb.execute(QUERIES[3]())
+        ok, why = tables_match(got, ref)
+        verdict["ok"] = ok and "q3_join" in eng.speculative.speculated
+        verdict["speculated"] = eng.speculative.speculated
+        verdict["why"] = why
+
+    elif scenario == "checkpoint_resume":
+        with tempfile.TemporaryDirectory() as d:
+            eng = DistributedEngine(db, n_shards=8, checkpoint_dir=d)
+            ref_out = eng.run_query(3)
+            # new engine resumes from the post-q3_join snapshot: only the
+            # final host merge should execute
+            eng2 = DistributedEngine(db, n_shards=8, checkpoint_dir=d)
+            got = eng2.run_query(3, resume=True)
+            ok, why = tables_match(got, ref_out)
+            verdict["ok"] = ok and eng2.timers.get("resumed_from", 0) == 2
+            verdict["resumed_from"] = eng2.timers.get("resumed_from")
+            verdict["why"] = why
+
+    elif scenario == "overflow_retry":
+        small_db = generate(0.002)
+        small_fb = FallbackEngine(small_db)
+        eng = DistributedEngine(small_db, n_shards=4, shuffle_slack=0.2)
+        got = eng.run_query(3)
+        ref = small_fb.execute(QUERIES[3]())
+        ok, why = tables_match(got, ref)
+        verdict["ok"] = ok and eng.shuffle_slack > 0.2
+        verdict["final_slack"] = eng.shuffle_slack
+        verdict["why"] = why
+
+    print(json.dumps(verdict))
+
+
+if __name__ == "__main__":
+    main()

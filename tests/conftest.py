@@ -1,0 +1,42 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tpch_db():
+    from repro.data.tpch import generate
+    return generate(scale_factor=0.01, seed=19920101)
+
+
+@pytest.fixture(scope="session")
+def tpch_engine(tpch_db):
+    from repro.core.executor import SiriusEngine
+    from repro.data.tpch import load_into_engine
+    eng = SiriusEngine()
+    load_into_engine(eng, tpch_db)
+    return eng
+
+
+def canon(v):
+    v = np.asarray(v)
+    if v.dtype.kind == "M":
+        return v.astype("datetime64[D]")
+    if v.dtype.kind in "UO":
+        return np.asarray(v, "U")
+    return v
+
+
+def assert_tables_equal(res: dict, ref: dict, rtol=1e-6, atol=1e-6):
+    assert set(res) == set(ref), f"columns differ: {set(res)} vs {set(ref)}"
+    if res:
+        n1 = len(next(iter(res.values())))
+        n2 = len(next(iter(ref.values())))
+        assert n1 == n2, f"row counts differ: {n1} vs {n2}"
+    for k in res:
+        a, b = canon(res[k]), canon(ref[k])
+        if a.dtype.kind == "f" or b.dtype.kind == "f":
+            np.testing.assert_allclose(
+                a.astype(float), b.astype(float), rtol=rtol, atol=atol,
+                err_msg=f"column {k}")
+        else:
+            assert (a == b).all(), f"column {k}: {a[:5]} vs {b[:5]}"

@@ -1,0 +1,88 @@
+"""The roofline's HLO parsers must be exact on known programs.
+
+These validate the two analyses the §Roofline deliverable depends on:
+loop-corrected matmul FLOPs (XLA's cost_analysis counts while bodies once)
+and collective byte accounting with loop multipliers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, dot_flops
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*[jax.ShapeDtypeStruct(s, jnp.float32)
+                              for s in shapes]).compile()
+
+
+def test_dot_flops_single_matmul():
+    c = _compile(lambda a, b: a @ b, (64, 128), (128, 32))
+    assert dot_flops(c.as_text()) == 2 * 64 * 128 * 32
+
+
+def test_dot_flops_scan_multiplies_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    c = _compile(f, (128, 128), (128, 128))
+    assert dot_flops(c.as_text()) == 7 * 2 * 128 ** 3
+
+
+def test_dot_flops_nested_scans_multiply():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+    c = _compile(g, (128, 128), (128, 128))
+    assert dot_flops(c.as_text()) == 15 * 2 * 128 ** 3
+
+
+def test_dot_flops_batched_einsum():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c = _compile(f, (4, 32, 64), (4, 64, 16))
+    assert dot_flops(c.as_text()) == 2 * 4 * 32 * 64 * 16
+
+
+@pytest.mark.slow
+def test_collective_bytes_in_loop(tmp_path):
+    """Loop-varying psum must be multiplied by the trip count."""
+    import os
+    import subprocess
+    import sys
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.launch.hlo_analysis import collective_bytes
+mesh = Mesh(np.array(jax.devices()), ('data',))
+def f(x):
+    def body(c, i):
+        # loop-varying: cannot be hoisted
+        return c + jax.lax.psum((x * i).sum(), 'data'), None
+    out, _ = jax.lax.scan(body, 0.0, jnp.arange(6.0))
+    return out
+g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P('data'), out_specs=P(),
+                          check_vma=False))
+c = g.lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+cb = collective_bytes(c.as_text())
+# psum of f32 scalar: 4 bytes x2 (AR) x6 trips = 48
+assert cb.get('all-reduce', 0) == 48.0, cb
+print('OK')
+""" % (os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=300)
+    assert "OK" in proc.stdout, proc.stderr[-2000:]

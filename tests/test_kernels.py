@@ -1,0 +1,190 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py.
+
+Kernels run in interpret mode (CPU container); the pallas_call + BlockSpec
+lowering path is identical to the TPU deployment path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# groupby_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 17, 1024, 5000])
+@pytest.mark.parametrize("n_groups", [1, 7, 200, 1000])
+@pytest.mark.parametrize("v_cols", [1, 3])
+def test_groupby_sum_shapes(n, n_groups, v_cols):
+    rng = np.random.default_rng(n * 31 + n_groups)
+    g = jnp.asarray(rng.integers(0, n_groups, n))
+    v = jnp.asarray(rng.normal(size=(n, v_cols)))
+    got = ops.groupby_sum(g, v, n_groups)
+    want = ref.groupby_sum_ref(g, v, n_groups)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.int32])
+def test_groupby_sum_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.integers(0, 50, 2000))
+    v = jnp.asarray(rng.integers(-100, 100, size=(2000, 2))).astype(dtype)
+    got = ops.groupby_sum(g, v, 50)
+    want = ref.groupby_sum_ref(g, v, 50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_groupby_sum_invalid_rows_dropped():
+    g = jnp.array([0, 1, 99999, -1, 1])
+    v = jnp.ones((5, 1))
+    got = ops.groupby_sum(g, v, 2)
+    np.testing.assert_allclose(np.asarray(got).ravel(), [1.0, 2.0])
+
+
+def test_groupby_sum_large_partitioned():
+    rng = np.random.default_rng(11)
+    n_groups = 10_000  # exceeds the VMEM group budget → multi-call partition
+    g = jnp.asarray(rng.integers(0, n_groups, 20_000))
+    v = jnp.asarray(rng.normal(size=(20_000, 1)))
+    got = ops.groupby_sum_large(g, v, n_groups)
+    want = ref.groupby_sum_ref(g, v, n_groups)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# filter_count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 100, 2048, 4097])
+@pytest.mark.parametrize("c", [1, 2, 4])
+def test_filter_mask_counts_shapes(n, c):
+    rng = np.random.default_rng(n + c)
+    cols = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(-1, 0, c).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0, 1, c).astype(np.float32))
+    m1, c1 = ops.filter_mask_counts(cols, lo, hi)
+    m2, c2 = ref.filter_mask_counts_ref(cols, lo, hi)
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+
+
+def test_filter_select_compaction():
+    cols = jnp.asarray(np.array([[0.1], [5.0], [0.2], [7.0], [0.3]],
+                                np.float32))
+    idx, count = ops.filter_select(cols, [0.0], [1.0])
+    assert int(count) == 3
+    assert sorted(np.asarray(idx)[:3].tolist()) == [0, 2, 4]
+
+
+@given(st.integers(1, 3000), st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_filter_property(n, seed):
+    rng = np.random.default_rng(seed)
+    cols = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    lo = jnp.array([-0.5, -np.inf], jnp.float32)
+    hi = jnp.array([0.5, 0.0], jnp.float32)
+    m, _ = ops.filter_mask_counts(cols, lo, hi)
+    want = (np.asarray(cols[:, 0]) >= -0.5) & (np.asarray(cols[:, 0]) <= 0.5) \
+        & (np.asarray(cols[:, 1]) <= 0.0)
+    assert (np.asarray(m) == want).all()
+
+
+# ---------------------------------------------------------------------------
+# hash_probe
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_build", [1, 64, 1000, 5000])
+@pytest.mark.parametrize("n_probe", [1, 1024, 3000])
+def test_hash_probe_shapes(n_build, n_probe):
+    rng = np.random.default_rng(n_build + n_probe)
+    bk = rng.choice(np.arange(10 * n_build + 10, dtype=np.int64), n_build,
+                    replace=False)
+    pk = np.concatenate([
+        rng.choice(bk, max(n_probe // 2, 1)),
+        rng.integers(10**7, 2 * 10**7, n_probe - max(n_probe // 2, 1)),
+    ])[:n_probe]
+    b32, p32 = ops.factorize_keys_int32(bk, pk)
+    sk, sr, placed = ops.build_table32(jnp.asarray(b32))
+    assert bool(placed)
+    row, found = ops.hash_probe(jnp.asarray(p32), sk, sr)
+    rrow, rfound = ref.hash_probe_ref(jnp.asarray(p32), sk, sr)
+    assert (np.asarray(row) == np.asarray(rrow)).all()
+    assert (np.asarray(found) == np.asarray(rfound)).all()
+    # semantics
+    exp = np.isin(pk, bk)
+    assert (np.asarray(found) == exp).all()
+    hit = np.asarray(found)
+    assert (b32[np.asarray(row)[hit]] == p32[hit]).all()
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_hash_probe_property(n, seed):
+    rng = np.random.default_rng(seed)
+    bk = rng.choice(np.arange(4 * n, dtype=np.int64), n, replace=False)
+    pk = rng.integers(0, 8 * n, 500)
+    b32, p32 = ops.factorize_keys_int32(bk, pk)
+    sk, sr, placed = ops.build_table32(jnp.asarray(b32))
+    assert bool(placed)
+    row, found = ops.hash_probe(jnp.asarray(p32), sk, sr)
+    assert (np.asarray(found) == np.isin(pk, bk)).all()
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,kvh", [(8, 8), (8, 4), (32, 8), (16, 1)])
+@pytest.mark.parametrize("s", [64, 700, 1536])
+def test_decode_attention_shapes(h, kvh, s):
+    rng = np.random.default_rng(h * s)
+    b, d = 2, 64
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    lengths = jnp.asarray([s, max(s // 3, 1)])
+    got = ops.decode_attention(q, k, v, lengths)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    b, h, kvh, d, s = 1, 4, 2, 32, 300
+    q = jnp.asarray(rng.normal(size=(b, h, d))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d))).astype(dtype)
+    lengths = jnp.asarray([s])
+    got = ops.decode_attention(q, k, v, lengths).astype(jnp.float32)
+    want = ref.decode_attention_ref(q, k, v, lengths).astype(jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_ignores_padded_tail():
+    """Entries beyond `length` must not affect the result."""
+    rng = np.random.default_rng(5)
+    b, h, kvh, d, s = 1, 4, 4, 32, 200
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    out1 = ops.decode_attention(q, k, v, jnp.asarray([100]))
+    k2 = k.at[:, 100:].set(99.0)
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = ops.decode_attention(q, k2, v2, jnp.asarray([100]))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,201 @@
+"""Per-architecture smoke tests (assignment: reduced config, same family,
+one forward/train step on CPU, output shapes + no NaNs) plus layer unit
+tests and training-substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, get_config, reduced
+from repro.models import lm
+from repro.models import layers as L
+from repro.training.optimizer import (
+    OptConfig, adamw_update, compress_int8, decompress_int8, init_opt_state,
+)
+from repro.training.train_step import make_train_step
+
+ARCHS = sorted(all_configs())
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s))),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s))),
+    }
+    if cfg.n_img_tiles:
+        n = cfg.n_img_tiles * cfg.img_patches
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(b, n, cfg.d_model)).astype(np.float32))
+    if cfg.enc_layers:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss = lm.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert 3.0 < float(loss) < 12.0, f"{arch}: loss implausible {loss}"
+
+    step = make_train_step(cfg, OptConfig(warmup_steps=1, total_steps=10))
+    state = {"params": params, "opt": init_opt_state(params)}
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params must actually change
+    delta = float(jnp.abs(
+        state2["params"]["embed"] - params["embed"]).max())
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode(arch):
+    cfg = reduced(get_config(arch))
+    b = 2
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, b=b)
+    cache = lm.init_cache(cfg, b, 16)
+    if cfg.enc_layers:
+        cache["enc_out"] = lm._encoder(params, cfg, batch["frames"])
+    logits, cache = lm.decode_step(params, cfg, cache, batch["tokens"][:, :1])
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    logits2, cache = lm.decode_step(params, cfg, cache,
+                                    batch["tokens"][:, 1:2])
+    assert int(cache["length"][0]) == 2
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # padded-vocab tail is masked out
+    if cfg.padded_vocab != cfg.vocab:
+        assert float(np.asarray(logits2)[..., cfg.vocab:].max()) < -1e20
+
+
+def test_decode_matches_forward_incrementally():
+    """Teacher-forced decode logits must match the parallel forward."""
+    cfg = reduced(get_config("qwen3-4b"))
+    params = lm.init_params(jax.random.PRNGKey(2), cfg)
+    b, s = 1, 8
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, cfg.vocab, (b, s)))
+    hidden = lm.forward(params, cfg, toks)
+    full = lm.logits_fn(params, cfg, hidden)
+    cache = lm.init_cache(cfg, b, s + 1)
+    outs = []
+    for i in range(s):
+        lg, cache = lm.decode_step(params, cfg, cache, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    b, s, h, kvh, d = 2, 256, 8, 4, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)).astype(np.float32))
+    out = L.blockwise_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    # naive reference
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    scores = jnp.einsum("bikgd,bjkd->bkgij", qg, k) / (d ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgij,bjkd->bikgd", p, v).reshape(b, s, h, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_cross_attention_unequal_lengths():
+    rng = np.random.default_rng(1)
+    b, sq, skv, h, d = 1, 64, 100, 4, 16   # skv not divisible by block
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    out = L.blockwise_attention(q, k, v, causal=False, block_q=32,
+                                block_kv=32)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / (d ** 0.5)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhij,bjhd->bihd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_decode_matches_train_scan():
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    p = L.init_mamba(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    b, s = 1, 12
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)).astype(np.float32))
+    full = L.mamba_train(p, cfg, x)
+    mm = cfg.mamba
+    din = mm.expand * cfg.d_model
+    conv = jnp.zeros((b, mm.d_conv - 1, din), jnp.float32)
+    ssm = jnp.zeros((b, din, mm.d_state), jnp.float32)
+    outs = []
+    for i in range(s):
+        y, conv, ssm = L.mamba_decode(p, cfg, x[:, i:i + 1], conv, ssm)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routes_topk_and_drops_overflow():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    p = L.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 16, cfg.d_model)).astype(np.float32))
+    y = L.moe(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_int8_gradient_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, scale = compress_int8(g)
+    deq = decompress_int8(q, scale)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.01
+    # error feedback: accumulated residual keeps the mean unbiased over steps
+    err = jnp.zeros_like(g)
+    acc_plain = jnp.zeros_like(g)
+    acc_comp = jnp.zeros_like(g)
+    for _ in range(50):
+        g32 = g + err
+        q, scale = compress_int8(g32)
+        deq = decompress_int8(q, scale)
+        err = g32 - deq
+        acc_comp = acc_comp + deq
+        acc_plain = acc_plain + g
+    drift = float(jnp.abs(acc_comp - acc_plain).max())
+    assert drift < 0.05  # bounded by one quantization step
+
+
+def test_adamw_converges_on_quadratic():
+    w = jnp.asarray([5.0, -3.0])
+    state = init_opt_state({"w": w})
+    cfg = OptConfig(lr=0.3, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    params = {"w": w}
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_param_count_matches_init():
+    """Config param_count() must agree with actual initialized tree size."""
+    for arch in ("qwen3-4b", "falcon-mamba-7b", "phi3.5-moe-42b-a6.6b"):
+        cfg = reduced(get_config(arch))
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        n_init = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        n_cfg = cfg.param_count()
+        # padded vocab + whisper pos tables aren't in the analytic count
+        pad = (cfg.padded_vocab - cfg.vocab) * cfg.d_model * (
+            1 if cfg.tie_embeddings else 2)
+        assert abs(n_init - pad - n_cfg) / n_cfg < 0.2, (arch, n_init, n_cfg)

@@ -1,0 +1,236 @@
+"""Unit + property tests for the relational substrate."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.relational import (
+    AggSpec, Between, Case, Col, Column, DateLit, InList, Like, Lit, SortKey,
+    Substr, Table, evaluate, group_aggregate, hash_join, sort_table,
+)
+from repro.relational.join import StaticHashTable, combine_keys
+from repro.relational.table import date_to_days, days_to_date
+
+
+# ---------------------------------------------------------------------------
+# Table / Column
+# ---------------------------------------------------------------------------
+
+
+def test_string_dictionary_is_order_preserving():
+    c = Column.from_strings(["pear", "apple", "pear", "banana"])
+    assert list(c.dictionary) == ["apple", "banana", "pear"]
+    assert list(np.asarray(c.data)) == [2, 0, 2, 1]
+    assert list(c.to_host()) == ["pear", "apple", "pear", "banana"]
+
+
+def test_date_roundtrip():
+    assert days_to_date(date_to_days("1995-03-15")) == "1995-03-15"
+    c = Column.from_dates(["1992-01-01", "1998-08-02"])
+    assert c.to_host()[1] == np.datetime64("1998-08-02")
+
+
+def test_recode_to_shared_dictionary():
+    a = Column.from_strings(["x", "y", "z"])
+    b = Column.from_strings(["y", "w"])
+    from repro.relational.table import unify_string_keys
+    a2, b2 = unify_string_keys(a, b)
+    assert np.array_equal(a2.dictionary, b2.dictionary)
+    assert list(a2.to_host()) == ["x", "y", "z"]
+    assert list(b2.to_host()) == ["y", "w"]
+
+
+def test_concat_merges_dictionaries():
+    t1 = Table.from_pydict({"s": np.array(["a", "c"])})
+    t2 = Table.from_pydict({"s": np.array(["b", "a"])})
+    t = Table.concat([t1, t2])
+    assert list(t["s"].to_host()) == ["a", "c", "b", "a"]
+
+
+# ---------------------------------------------------------------------------
+# expressions (property: engine eval == numpy semantics)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=50),
+       st.floats(-1e6, 1e6))
+@settings(max_examples=25, deadline=None)
+def test_arith_and_compare_property(xs, threshold):
+    arr = np.asarray(xs)
+    t = Table.from_pydict({"x": arr})
+    got = np.asarray(evaluate((Col("x") * Lit(2.0) + Lit(1.0)) > Lit(threshold), t).data)
+    want = (arr * 2.0 + 1.0) > threshold
+    assert (got == want).all()
+
+
+@given(st.lists(st.sampled_from(["foo", "foobar", "bar", "baz", "qux"]),
+                min_size=1, max_size=40))
+@settings(max_examples=25, deadline=None)
+def test_like_property(words):
+    t = Table.from_pydict({"s": np.asarray(words)})
+    got = np.asarray(evaluate(Like(Col("s"), "foo%"), t).data)
+    want = np.array([w.startswith("foo") for w in words])
+    assert (got == want).all()
+    got2 = np.asarray(evaluate(Like(Col("s"), "%ba%"), t).data)
+    want2 = np.array(["ba" in w for w in words])
+    assert (got2 == want2).all()
+
+
+def test_string_comparison_via_codes():
+    t = Table.from_pydict({"s": np.array(["delta", "alpha", "zeta", "beta"])})
+    got = np.asarray(evaluate(Col("s") < Lit("beta"), t).data)
+    assert list(got) == [False, True, False, False]
+    got = np.asarray(evaluate(Col("s") >= Lit("delta"), t).data)
+    assert list(got) == [True, False, True, False]
+    # literal absent from the dictionary
+    got = np.asarray(evaluate(Col("s") <= Lit("charlie"), t).data)
+    assert list(got) == [False, True, False, True]
+
+
+def test_case_between_inlist_substr():
+    t = Table.from_pydict({
+        "x": np.array([1.0, 5.0, 10.0]),
+        "p": np.array(["13-555", "99-123", "31-000"]),
+    })
+    c = evaluate(Case([(Col("x") > Lit(4.0), Lit(1.0))], Lit(0.0)), t)
+    assert list(np.asarray(c.data)) == [0.0, 1.0, 1.0]
+    b = evaluate(Between(Col("x"), Lit(2.0), Lit(9.0)), t)
+    assert list(np.asarray(b.data)) == [False, True, False]
+    i = evaluate(InList(Substr(Col("p"), 1, 2), ["13", "31"]), t)
+    assert list(np.asarray(i.data)) == [True, False, True]
+
+
+def test_extract_year():
+    from repro.relational.expressions import ExtractYear
+    t = Table.from_pydict({
+        "d": np.array(["1992-01-01", "1995-06-17", "1998-12-31", "1996-02-29"],
+                      dtype="datetime64[D]")})
+    y = np.asarray(evaluate(ExtractYear(Col("d")), t).data)
+    assert list(y) == [1992, 1995, 1998, 1996]
+
+
+# ---------------------------------------------------------------------------
+# joins
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 200), st.integers(1, 100), st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_inner_join_property(n_probe, n_build, seed):
+    rng = np.random.default_rng(seed)
+    bk = rng.choice(np.arange(n_build * 2), n_build, replace=False)
+    pk = rng.choice(np.arange(n_build * 2), n_probe)
+    probe = Table.from_pydict({"k": pk, "pv": np.arange(n_probe)})
+    build = Table.from_pydict({"k": bk, "bv": np.arange(n_build) * 10})
+    out = hash_join(probe, build, ["k"], ["k"], "inner").to_host()
+    # oracle via python dict (build keys unique)
+    lookup = {k: v for k, v in zip(bk, np.arange(n_build) * 10)}
+    want = [(k, pv, lookup[k]) for k, pv in zip(pk, np.arange(n_probe)) if k in lookup]
+    got = sorted(zip(out["k"], out["pv"], out["bv"]))
+    assert got == sorted(want)
+
+
+def test_multimatch_inner_join():
+    probe = Table.from_pydict({"k": np.array([1, 2, 3])})
+    build = Table.from_pydict({"k": np.array([1, 1, 2, 1]),
+                               "v": np.array([10, 11, 12, 13])})
+    out = hash_join(probe, build, ["k"], ["k"], "inner").to_host()
+    assert sorted(zip(out["k"], out["v"])) == [(1, 10), (1, 11), (1, 13), (2, 12)]
+
+
+def test_semi_anti_mark_left():
+    probe = Table.from_pydict({"k": np.array([1, 2, 3, 4])})
+    build = Table.from_pydict({"k": np.array([2, 4]), "v": np.array([20, 40])})
+    assert list(hash_join(probe, build, ["k"], ["k"], "semi").to_host()["k"]) == [2, 4]
+    assert list(hash_join(probe, build, ["k"], ["k"], "anti").to_host()["k"]) == [1, 3]
+    m = hash_join(probe, build, ["k"], ["k"], "mark").to_host()
+    assert list(m["__mark"]) == [False, True, False, True]
+    l = hash_join(probe, build, ["k"], ["k"], "left").to_host()
+    assert list(l["__matched"]) == [False, True, False, True]
+    assert len(l["k"]) == 4
+
+
+def test_multicolumn_join_keys():
+    probe = Table.from_pydict({"a": np.array([1, 1, 2]), "b": np.array(["x", "y", "x"])})
+    build = Table.from_pydict({"a": np.array([1, 2]), "b": np.array(["y", "x"]),
+                               "v": np.array([7, 8])})
+    out = hash_join(probe, build, ["a", "b"], ["a", "b"], "inner").to_host()
+    assert sorted(zip(out["a"], out["v"])) == [(1, 7), (2, 8)]
+
+
+# ---------------------------------------------------------------------------
+# static hash table (oracle for the Pallas probe kernel)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_static_hash_table_property(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(np.arange(4 * n, dtype=np.int64), n, replace=False)
+    ht = StaticHashTable.build(jnp.asarray(keys))
+    assert bool(ht.all_placed)
+    # every build key found, absent keys rejected
+    probe = np.concatenate([keys, keys + 4 * n])
+    row, found = ht.lookup(jnp.asarray(probe))
+    assert np.asarray(found[:n]).all()
+    assert not np.asarray(found[n:]).any()
+    assert (keys[np.asarray(row[:n])] == keys).all()
+
+
+# ---------------------------------------------------------------------------
+# aggregate / sort
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 300), st.integers(1, 10), st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_group_aggregate_property(n, ngroups, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, ngroups, n)
+    v = rng.normal(size=n)
+    t = Table.from_pydict({"g": g, "v": v})
+    out = group_aggregate(t, ["g"], [
+        AggSpec("sum", Col("v"), "s"), AggSpec("min", Col("v"), "mn"),
+        AggSpec("max", Col("v"), "mx"), AggSpec("avg", Col("v"), "av"),
+        AggSpec("count_star", None, "n")]).to_host()
+    for i, gid in enumerate(out["g"]):
+        sel = v[g == gid]
+        np.testing.assert_allclose(out["s"][i], sel.sum(), rtol=1e-9)
+        np.testing.assert_allclose(out["mn"][i], sel.min())
+        np.testing.assert_allclose(out["mx"][i], sel.max())
+        np.testing.assert_allclose(out["av"][i], sel.mean(), rtol=1e-9)
+        assert out["n"][i] == len(sel)
+
+
+def test_count_distinct():
+    t = Table.from_pydict({"g": np.array([0, 0, 0, 1, 1]),
+                           "v": np.array([5, 5, 6, 7, 7])})
+    out = group_aggregate(t, ["g"], [AggSpec("count_distinct", Col("v"), "cd")])
+    assert list(out.to_host()["cd"]) == [2, 1]
+
+
+def test_sort_multi_key_desc_and_strings():
+    t = Table.from_pydict({
+        "a": np.array([2, 1, 2, 1]),
+        "s": np.array(["beta", "alpha", "alpha", "beta"]),
+        "v": np.array([1.0, 2.0, 3.0, 4.0])})
+    out = sort_table(t, [SortKey("a"), SortKey("s", ascending=False)]).to_host()
+    assert list(out["v"]) == [4.0, 2.0, 1.0, 3.0]
+
+
+def test_buffer_manager_spill_and_promote(tpch_db):
+    from repro.buffer.manager import BufferManager
+    from repro.relational.table import Table as T
+    bm = BufferManager(caching_bytes=1 << 20)
+    a = T.from_pydict({"x": np.arange(60_000, dtype=np.int64)})  # ~480KB
+    b = T.from_pydict({"y": np.arange(60_000, dtype=np.int64)})
+    c = T.from_pydict({"z": np.arange(60_000, dtype=np.int64)})
+    bm.cache_table("a", a)
+    bm.cache_table("b", b)
+    bm.cache_table("c", c)          # evicts LRU ("a")
+    assert bm.spill_count >= 1
+    got = bm.get("a")               # transparently promoted back
+    assert bm.promote_count >= 1
+    assert int(np.asarray(got["x"].data)[-1]) == 59_999
