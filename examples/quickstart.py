@@ -1,10 +1,14 @@
-"""Quickstart: drop-in accelerated SQL over the Substrait-like plan IR.
+"""Quickstart: drop-in accelerated SQL, from SQL text to device results.
 
-Mirrors the paper's single-node lifecycle (§3.3): the 'host database layer'
-(here: hand-built plans standing in for DuckDB's optimizer, serialized
-through the JSON plan format) hands the engine a plan; the engine executes it
-entirely on the accelerator path with the buffer manager's cached tables, and
-falls back to the host engine when something is unsupported.
+Mirrors the paper's single-node lifecycle (§3.3) end to end, with the SQL
+frontend as the primary path: SQL text is parsed, bound against the TPC-H
+catalog, lowered to the Substrait-like plan IR, rewritten by the rule-based
+optimizer (predicate pushdown, projection pruning, join ordering, build-side
+selection), serialized across the host-DB → engine boundary, and executed on
+the accelerator path with the buffer manager's cached tables.  Hand-built
+plans remain as the fallback/oracle path — pre-optimized trees standing in
+for DuckDB's output — and the engine degrades to the numpy host engine when
+something is unsupported.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,11 +16,13 @@ import numpy as np
 
 from repro.core.executor import SiriusEngine
 from repro.core.plan import (
-    AggregateRel, JoinRel, ReadRel, SortRel, plan_from_json, plan_to_json,
+    AggregateRel, JoinRel, ReadRel, SortRel, explain, plan_from_json,
+    plan_to_json,
 )
 from repro.data.tpch import generate, load_into_engine
-from repro.data.tpch_queries import QUERIES
-from repro.relational import AggSpec, Col, Lit, SortKey, Table
+from repro.data.tpch_queries import QUERIES, SQL_QUERIES
+from repro.relational import AggSpec, Col, SortKey
+from repro.sql import sql_to_plan
 
 
 def main():
@@ -26,24 +32,53 @@ def main():
     load_into_engine(engine, db)
     print("buffer manager:", engine.buffers.stats()["cached_tables"])
 
-    print("\n== a hand-built plan crossing the Substrait boundary ==")
+    print("\n== the primary path: SQL text in, device table out ==")
+    sql = """
+        select c_mktsegment, sum(o_totalprice) as revenue,
+               count(*) as orders
+        from orders, customer
+        where o_custkey = c_custkey and o_totalprice > 0
+        group by c_mktsegment
+        order by revenue desc
+    """
+    result = engine.sql(sql)
+    for row in result.to_pylist():
+        print(f"  {row['c_mktsegment']:<12} revenue={row['revenue']:>14,.2f} "
+              f"orders={row['orders']}")
+
+    print("\n== what the optimizer did (EXPLAIN, with row estimates) ==")
+    naive = sql_to_plan(sql, optimize=False)
+    optimized = sql_to_plan(sql, optimize=True)
+    print("naive plan:")
+    print(explain(naive))
+    print("optimized plan (filters at scans, pruned reads, build sides):")
+    print(explain(optimized))
+
+    print("\n== the plan crosses the Substrait-like wire boundary ==")
+    wire = plan_to_json(optimized)          # host DB → engine handoff
+    print(f"wire format: {len(wire)} bytes of JSON")
+    engine.execute(plan_from_json(wire))
+
+    print("\n== TPC-H Q3: SQL text vs the hand-built oracle plan ==")
+    q3_sql = engine.sql(SQL_QUERIES[3]).to_host()
+    q3_oracle = engine.execute(QUERIES[3]()).to_host()
+    same = all(
+        np.allclose(q3_sql[k].astype(float), q3_oracle[k].astype(float))
+        if np.asarray(q3_sql[k]).dtype.kind == "f"
+        else (np.asarray(q3_sql[k]) == np.asarray(q3_oracle[k])).all()
+        for k in q3_sql)
+    print(f"rows: {len(q3_sql['l_orderkey'])}, "
+          f"SQL path == hand-built plan: {same}")
+
+    print("\n== hand-built plans still work (the fallback/oracle path) ==")
     plan = SortRel(
         AggregateRel(
             JoinRel(ReadRel("orders"), ReadRel("customer"),
                     ["o_custkey"], ["c_custkey"], "inner"),
             ["c_mktsegment"],
-            [AggSpec("sum", Col("o_totalprice"), "revenue"),
-             AggSpec("count_star", None, "orders")]),
+            [AggSpec("sum", Col("o_totalprice"), "revenue")]),
         [SortKey("revenue", ascending=False)])
-    wire = plan_to_json(plan)           # host DB → engine handoff
-    result = engine.execute(plan_from_json(wire))
-    for row in result.to_pylist():
-        print(f"  {row['c_mktsegment']:<12} revenue={row['revenue']:'>14,.2f} "
-              f"orders={row['orders']}")
-
-    print("\n== TPC-H Q3 through the same engine ==")
-    q3 = engine.execute(QUERIES[3]())
-    print(q3.to_host())
+    print(engine.execute(plan).to_host()["revenue"])
 
     print("\n== kernel backend usage ==")
     print(f"Pallas filter kernel hits: {engine.backend.filter_hits}, "

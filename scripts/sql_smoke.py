@@ -1,0 +1,50 @@
+"""SQL-frontend smoke check: parse, optimize and EXPLAIN every SQL-text
+TPC-H query *without executing it* (no data generation, no engine).
+
+Exit code is non-zero if any query fails to parse/bind/lower/optimize, if
+the optimized plan fails to round-trip through the JSON wire format, or if
+predicate pushdown failed to land a filter in a ReadRel where one is
+expected.  This is the fast CI job guarding the frontend.
+
+Run:  PYTHONPATH=src python scripts/sql_smoke.py [-v]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main(verbose: bool = False) -> int:
+    from repro.core.plan import (
+        ReadRel, explain, plan_equal, plan_from_json, plan_to_json, walk,
+    )
+    from repro.data.tpch_queries import SQL_PUSHDOWN_QIDS, SQL_QUERIES
+    from repro.sql import sql_to_plan
+
+    failures = 0
+    for qid in sorted(SQL_QUERIES):
+        try:
+            naive = sql_to_plan(SQL_QUERIES[qid], optimize=False)
+            opt = sql_to_plan(SQL_QUERIES[qid], optimize=True)
+            restored = plan_from_json(plan_to_json(opt))
+            assert plan_equal(restored, opt), "wire-format round-trip drifted"
+            pushed = [r for r in walk(opt)
+                      if isinstance(r, ReadRel) and r.filter is not None]
+            if qid in SQL_PUSHDOWN_QIDS:
+                assert pushed, "predicate pushdown reached no ReadRel"
+            n_ops = sum(1 for _ in walk(opt))
+            print(f"Q{qid:>2}: ok — {n_ops} operators, "
+                  f"{len(pushed)} scan filter(s)")
+            if verbose:
+                print(explain(opt))
+                print()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"Q{qid:>2}: FAIL — {type(e).__name__}: {e}")
+    total = len(SQL_QUERIES)
+    print(f"\n{total - failures}/{total} SQL TPC-H queries parse, optimize "
+          "and explain cleanly")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(verbose="-v" in sys.argv[1:]))

@@ -445,6 +445,11 @@ class SiriusEngine:
     def execute(self, plan: Rel) -> Table:
         return self.executor.execute(plan)
 
+    def sql(self, text: str, catalog=None, optimize: bool = True) -> Table:
+        """Drop-in entry point: SQL text → parse → optimize → execute."""
+        from ..sql import run_sql
+        return run_sql(text, self, catalog=catalog, optimize=optimize)
+
     def execute_with_fallback(self, plan: Rel):
         """Run on the accelerator engine; on failure, degrade to the host path."""
         try:

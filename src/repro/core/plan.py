@@ -1,13 +1,24 @@
 """Substrait-like query plan IR (the drop-in boundary of the paper, §3.1-3.2).
 
-The host database layer (our mini SQL frontend, or hand-built TPC-H plans
-standing in for DuckDB's optimizer output) produces this IR; the execution
-engine consumes it.  Like Substrait, the IR is a tree of relational operators
-with embedded scalar expressions and is JSON-round-trippable, so a plan can
-cross a process/system boundary — that is what makes Sirius "drop-in".
+The host database layer produces this IR; the execution engine consumes it.
+The **primary** producer is the SQL frontend (``repro.sql.sql_to_plan`` /
+``run_sql``): SQL text is tokenized, parsed, bound against the catalog and
+lowered to this IR, then rewritten by the rule-based optimizer
+(``repro.optimizer.optimize``) — the same parse→optimize→Substrait pipeline
+DuckDB runs in front of Sirius.  The hand-built TPC-H plan builders in
+``repro.data.tpch_queries`` remain as the fallback/oracle path: pre-optimized
+plans standing in for DuckDB's output, used to validate the frontend
+row-for-row.  Like Substrait, the IR is a tree of relational operators with
+embedded scalar expressions and is JSON-round-trippable, so a plan can cross
+a process/system boundary — that is what makes Sirius "drop-in".
 
 Node vocabulary mirrors Substrait relations: ReadRel, FilterRel, ProjectRel,
 JoinRel, AggregateRel, SortRel, FetchRel (limit), ExchangeRel.
+
+Optimizer passes annotate nodes with ``estimated_rows`` (a plain attribute,
+deliberately not a dataclass field so the wire format is unchanged);
+``explain`` prints the annotation, which is what the EXPLAIN-level plan
+observability of the Terabyte-Scale-Analytics line of work keys on.
 """
 from __future__ import annotations
 
@@ -25,6 +36,10 @@ from ..relational.sort import SortKey
 
 class Rel:
     """Base class for plan nodes."""
+
+    # Cardinality annotation set by repro.optimizer.annotate (class-level
+    # default keeps it out of dataclass fields and the JSON wire format).
+    estimated_rows: Optional[float] = None
 
     def inputs(self) -> List["Rel"]:
         out = []
@@ -187,19 +202,93 @@ def walk(plan: Rel):
         yield from walk(child)
 
 
+def _expr_str(e: Expr) -> str:
+    """Compact expression rendering: scalar-subquery sub-plans are elided so
+    EXPLAIN lines stay one plan node per line."""
+    from ..relational.expressions import Col as _Col, transform_expr
+
+    def strip(n):
+        if isinstance(n, ScalarSubquery):
+            return _Col(f"<scalar-subquery:{n.column}>")
+        return n
+
+    return repr(transform_expr(e, strip))
+
+
 def explain(plan: Rel, indent: int = 0) -> str:
     pad = "  " * indent
     name = type(plan).__name__
     extra = ""
     if isinstance(plan, ReadRel):
-        extra = f" {plan.table}" + (f" filter={plan.filter!r}" if plan.filter else "")
+        extra = f" {plan.table}"
+        if plan.columns:
+            extra += f" cols={plan.columns}"
+        if plan.filter is not None:
+            extra += f" filter={_expr_str(plan.filter)}"
+    elif isinstance(plan, FilterRel):
+        extra = f" {_expr_str(plan.condition)}"
+    elif isinstance(plan, ProjectRel):
+        extra = f" {[n for n, _ in plan.exprs]}"
     elif isinstance(plan, JoinRel):
         extra = f" {plan.how} on {plan.probe_keys}={plan.build_keys}"
+        if plan.post_filter is not None:
+            extra += " post_filter=..."
     elif isinstance(plan, AggregateRel):
         extra = f" by {plan.group_keys} aggs={[a.name for a in plan.aggs]}"
+        if plan.having is not None:
+            extra += " having=..."
+    elif isinstance(plan, SortRel):
+        extra = " by " + ", ".join(
+            k.name + ("" if k.ascending else " desc") for k in plan.keys)
+        if plan.limit is not None:
+            extra += f" limit={plan.limit}"
     elif isinstance(plan, ExchangeRel):
         extra = f" {plan.kind} keys={plan.keys}"
+    if plan.estimated_rows is not None:
+        extra += f"  [~{plan.estimated_rows:,.0f} rows]"
     lines = [f"{pad}{name}{extra}"]
     for child in plan.inputs():
         lines.append(explain(child, indent + 1))
     return "\n".join(lines)
+
+
+def plan_equal(a: Rel, b: Rel) -> bool:
+    """Structural equality over plan trees.
+
+    The dataclass-generated ``__eq__`` on Rel nodes is unusable because the
+    embedded Expr nodes overload ``==`` to *build* comparison expressions;
+    this compares node types and fields recursively instead.
+    """
+    from ..relational.expressions import expr_equal
+
+    if type(a) is not type(b):
+        return False
+    if isinstance(a, AggSpec):
+        return (a.fn == b.fn and a.name == b.name
+                and expr_equal(a.expr, b.expr, rel_eq=plan_equal))
+    if isinstance(a, SortKey):
+        return a.name == b.name and a.ascending == b.ascending
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, Rel) or isinstance(vb, Rel):
+            if not (isinstance(va, Rel) and isinstance(vb, Rel)
+                    and plan_equal(va, vb)):
+                return False
+        elif isinstance(va, Expr) or isinstance(vb, Expr):
+            if not expr_equal(va, vb, rel_eq=plan_equal):
+                return False
+        elif isinstance(va, (list, tuple)) and isinstance(vb, (list, tuple)):
+            if len(va) != len(vb):
+                return False
+            for xa, xb in zip(va, vb):
+                if isinstance(xa, Rel):
+                    if not (isinstance(xb, Rel) and plan_equal(xa, xb)):
+                        return False
+                elif isinstance(xa, (AggSpec, SortKey)):
+                    if not plan_equal(xa, xb):
+                        return False
+                elif not expr_equal(xa, xb, rel_eq=plan_equal):
+                    return False
+        elif va != vb:
+            return False
+    return True

@@ -68,6 +68,66 @@ START = np.datetime64("1992-01-01", "D")
 END = np.datetime64("1998-08-02", "D")
 CURRENTDATE = np.datetime64("1995-06-17", "D")
 
+# ---------------------------------------------------------------------------
+# Catalog metadata: the schema the SQL binder resolves against and the base
+# cardinalities (rows at SF1) the optimizer's cost heuristics start from.
+# Kinds mirror relational.table: numeric | string | date.
+# ---------------------------------------------------------------------------
+
+TPCH_SCHEMA = {
+    "region": {
+        "r_regionkey": "numeric", "r_name": "string", "r_comment": "string",
+    },
+    "nation": {
+        "n_nationkey": "numeric", "n_name": "string",
+        "n_regionkey": "numeric", "n_comment": "string",
+    },
+    "supplier": {
+        "s_suppkey": "numeric", "s_name": "string", "s_address": "string",
+        "s_nationkey": "numeric", "s_phone": "string", "s_acctbal": "numeric",
+        "s_comment": "string",
+    },
+    "part": {
+        "p_partkey": "numeric", "p_name": "string", "p_mfgr": "string",
+        "p_brand": "string", "p_type": "string", "p_size": "numeric",
+        "p_container": "string", "p_retailprice": "numeric",
+        "p_comment": "string",
+    },
+    "partsupp": {
+        "ps_partkey": "numeric", "ps_suppkey": "numeric",
+        "ps_availqty": "numeric", "ps_supplycost": "numeric",
+        "ps_comment": "string",
+    },
+    "customer": {
+        "c_custkey": "numeric", "c_name": "string", "c_address": "string",
+        "c_nationkey": "numeric", "c_phone": "string", "c_acctbal": "numeric",
+        "c_mktsegment": "string", "c_comment": "string",
+    },
+    "orders": {
+        "o_orderkey": "numeric", "o_custkey": "numeric",
+        "o_orderstatus": "string", "o_totalprice": "numeric",
+        "o_orderdate": "date", "o_orderpriority": "string",
+        "o_clerk": "string", "o_shippriority": "numeric",
+        "o_comment": "string",
+    },
+    "lineitem": {
+        "l_orderkey": "numeric", "l_partkey": "numeric",
+        "l_suppkey": "numeric", "l_linenumber": "numeric",
+        "l_quantity": "numeric", "l_extendedprice": "numeric",
+        "l_discount": "numeric", "l_tax": "numeric",
+        "l_returnflag": "string", "l_linestatus": "string",
+        "l_shipdate": "date", "l_commitdate": "date",
+        "l_receiptdate": "date", "l_shipinstruct": "string",
+        "l_shipmode": "string", "l_comment": "string",
+    },
+}
+
+TPCH_BASE_ROWS = {
+    "region": 5, "nation": 25, "supplier": 10_000, "part": 200_000,
+    "partsupp": 800_000, "customer": 150_000, "orders": 1_500_000,
+    "lineitem": 6_000_000,
+}
+
 
 def _comments(rng: np.random.Generator, n: int, words: int = 4) -> np.ndarray:
     idx = rng.integers(0, len(COMMENT_WORDS), size=(n, words))

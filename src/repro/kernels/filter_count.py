@@ -30,7 +30,9 @@ def _kernel(cols_ref, lo_ref, hi_ref, mask_ref, count_ref):
     hi = hi_ref[...]
     m = jnp.all((x >= lo) & (x <= hi), axis=1)   # (TILE,)
     mask_ref[...] = m
-    count_ref[0] = jnp.sum(m.astype(jnp.int32))
+    # dtype pinned: with jax_enable_x64 a bare sum promotes to int64 and the
+    # int32 output ref rejects the store
+    count_ref[0] = jnp.sum(m, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,0 +1,44 @@
+"""Rule-based plan optimizer (the DuckDB-side rewrites of the paper).
+
+The SQL frontend lowers to a deliberately naive plan; these passes rewrite
+it into the shape the hand-built TPC-H plans are already in — filters at the
+scans, narrow reads, selective joins first, smaller hash-build sides —
+before the engine ever sees it.  ``optimize`` is pure: the input plan is
+never mutated, so naive/optimized comparisons (benchmarks/bench_optimizer)
+stay valid.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+from ..core.plan import Rel
+from .rules import (
+    choose_build_sides, fold_constants, order_conjuncts, prune_projections,
+    pushdown_predicates, reorder_joins,
+)
+from .stats import annotate, estimate, rel_columns, selectivity
+
+__all__ = [
+    "DEFAULT_RULES", "annotate", "estimate", "optimize", "rel_columns",
+    "selectivity",
+]
+
+# (name, pass) in application order
+DEFAULT_RULES: List[Tuple[str, Callable[[Rel, object], Rel]]] = [
+    ("fold_constants", fold_constants),
+    ("pushdown_predicates", pushdown_predicates),
+    ("prune_projections", prune_projections),
+    ("reorder_joins", reorder_joins),
+    ("choose_build_sides", choose_build_sides),
+    ("order_conjuncts", order_conjuncts),
+]
+
+
+def optimize(plan: Rel, catalog=None, rules=None) -> Rel:
+    """Apply the rule pipeline; annotate the result with row estimates."""
+    if catalog is None:
+        from ..sql.binder import DEFAULT_CATALOG
+        catalog = DEFAULT_CATALOG
+    for _name, rule in (DEFAULT_RULES if rules is None else rules):
+        plan = rule(plan, catalog)
+    return annotate(plan, catalog)

@@ -160,6 +160,111 @@ def _collect_columns(e: Expr, out: List[str]) -> None:
 
 
 # ---------------------------------------------------------------------------
+# generic structural helpers (used by the SQL frontend and the optimizer)
+# ---------------------------------------------------------------------------
+
+
+def expr_children(e: Expr) -> List[Expr]:
+    """Immediate Expr children, generic over the dataclass fields."""
+    out: List[Expr] = []
+    if not dataclasses.is_dataclass(e):
+        return out
+    for f in dataclasses.fields(e):
+        v = getattr(e, f.name)
+        if isinstance(v, Expr):
+            out.append(v)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                if isinstance(item, Expr):
+                    out.append(item)
+                elif isinstance(item, (list, tuple)):
+                    out.extend(x for x in item if isinstance(x, Expr))
+    return out
+
+
+def walk_expr(e: Expr):
+    """Pre-order traversal over an expression tree (does not enter sub-plans)."""
+    yield e
+    for c in expr_children(e):
+        yield from walk_expr(c)
+
+
+def transform_expr(e: Expr, fn) -> Expr:
+    """Bottom-up rebuild: apply ``fn`` to every node, children first."""
+    if not dataclasses.is_dataclass(e):
+        return fn(e)
+    changes = {}
+    for f in dataclasses.fields(e):
+        v = getattr(e, f.name)
+        if isinstance(v, Expr):
+            nv = transform_expr(v, fn)
+            if nv is not v:
+                changes[f.name] = nv
+        elif isinstance(v, (list, tuple)):
+            new_items, dirty = [], False
+            for item in v:
+                if isinstance(item, Expr):
+                    ni = transform_expr(item, fn)
+                    dirty |= ni is not item
+                    new_items.append(ni)
+                elif isinstance(item, tuple):
+                    ni = tuple(transform_expr(x, fn) if isinstance(x, Expr)
+                               else x for x in item)
+                    dirty |= any(a is not b for a, b in zip(ni, item))
+                    new_items.append(ni)
+                else:
+                    new_items.append(item)
+            if dirty:
+                changes[f.name] = type(v)(new_items) if isinstance(v, tuple) \
+                    else new_items
+    if changes:
+        e = dataclasses.replace(e, **changes)
+    return fn(e)
+
+
+def split_conjuncts(e: Optional[Expr]) -> List[Expr]:
+    """Flatten an AND tree into its conjuncts (None → [])."""
+    if e is None:
+        return []
+    if isinstance(e, BinOp) and e.op == "and":
+        return split_conjuncts(e.left) + split_conjuncts(e.right)
+    return [e]
+
+
+def and_all(conjuncts: Sequence[Expr]) -> Optional[Expr]:
+    """Rebuild an AND tree from conjuncts ([] → None)."""
+    out: Optional[Expr] = None
+    for c in conjuncts:
+        out = c if out is None else BinOp("and", out, c)
+    return out
+
+
+def expr_equal(a, b, rel_eq=None) -> bool:
+    """Structural equality (Expr.__eq__ is overloaded to build BinOp).
+
+    ``rel_eq`` compares embedded non-Expr dataclasses (plan sub-trees inside
+    ScalarSubquery); defaults to identity.
+    """
+    if a is b:
+        return True
+    if isinstance(a, Expr) or isinstance(b, Expr):
+        if type(a) is not type(b):
+            return False
+        for f in dataclasses.fields(a):
+            if not expr_equal(getattr(a, f.name), getattr(b, f.name), rel_eq):
+                return False
+        return True
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(
+            expr_equal(x, y, rel_eq) for x, y in zip(a, b))
+    if dataclasses.is_dataclass(a) or dataclasses.is_dataclass(b):
+        if type(a) is not type(b):
+            return False
+        return rel_eq(a, b) if rel_eq is not None else a is b
+    return a == b
+
+
+# ---------------------------------------------------------------------------
 # evaluation
 # ---------------------------------------------------------------------------
 

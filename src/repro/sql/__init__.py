@@ -1,0 +1,61 @@
+"""SQL frontend: the host-database half of the paper's drop-in pipeline.
+
+    sql text ── tokenize ─▶ parse ─▶ bind ─▶ lower ─▶ naive plan IR
+                                   (repro.optimizer.optimize) ─▶ optimized IR
+                                   (engine.execute / FallbackEngine) ─▶ rows
+
+Entry points:
+  * ``sql_to_plan(sql)``            — SQL text → (optimized) plan IR
+  * ``run_sql(sql, db)``            — end-to-end: parse, optimize, execute;
+    ``db`` may be a SiriusEngine, a FallbackEngine, or a host-format
+    ``dict[table] -> dict[col] -> np.ndarray``
+  * ``explain_sql(sql)``            — EXPLAIN output before/after rules
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from ..core.plan import Rel, explain
+from .binder import Catalog, DEFAULT_CATALOG
+from .lexer import SqlError, tokenize
+from .lower import lower_select
+from .parser import parse_sql
+
+__all__ = [
+    "Catalog", "SqlError", "explain_sql", "parse_sql", "run_sql",
+    "sql_to_plan", "tokenize",
+]
+
+
+def sql_to_plan(sql: str, catalog: Optional[Catalog] = None,
+                optimize: bool = True) -> Rel:
+    """Parse + bind + lower SQL text; optionally run the optimizer rules."""
+    plan = lower_select(parse_sql(sql), catalog or DEFAULT_CATALOG)
+    if optimize:
+        from ..optimizer import optimize as _optimize
+        plan = _optimize(plan, catalog or DEFAULT_CATALOG)
+    return plan
+
+
+def run_sql(sql: str, db, catalog: Optional[Catalog] = None,
+            optimize: bool = True):
+    """Execute SQL text against ``db``.
+
+    ``db`` is a ``SiriusEngine`` (returns a device ``Table``), a
+    ``FallbackEngine``, or a host-format dict-of-dicts (both return the
+    host-table dict format).
+    """
+    from ..core.fallback import FallbackEngine
+
+    plan = sql_to_plan(sql, catalog, optimize)
+    if isinstance(db, dict):
+        return FallbackEngine(db).execute(plan)
+    return db.execute(plan)
+
+
+def explain_sql(sql: str, catalog: Optional[Catalog] = None) -> str:
+    """EXPLAIN: the naive lowered plan and the optimized plan side by side."""
+    naive = sql_to_plan(sql, catalog, optimize=False)
+    optimized = sql_to_plan(sql, catalog, optimize=True)
+    return ("-- naive plan --\n" + explain(naive)
+            + "\n-- optimized plan --\n" + explain(optimized))

@@ -1,0 +1,219 @@
+"""Name resolution + light typing against the catalog.
+
+The binder rewrites parser output in three ways:
+
+  * ``SqlCol`` → engine ``Col`` (local scope) or ``OuterCol`` (correlated
+    reference to an enclosing scope, later decorrelated into join keys);
+  * date coercion: a string literal compared against (or bounding a BETWEEN
+    over) a DATE column becomes a DateLit, and ``date '...' ± interval``
+    arithmetic is constant-folded to a DateLit — the rewrites DuckDB's
+    binder performs before its optimizer runs;
+  * scope bookkeeping: which FROM table provides each column (the lowering
+    pass builds the join graph from this).
+
+TPC-H column names are globally unique, so resolution maps every reference
+to its bare column name; qualifiers are validated, then dropped.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ..data.tpch import TPCH_BASE_ROWS, TPCH_SCHEMA
+from ..relational.expressions import (
+    Between, BinOp, Col, Expr, Lit, transform_expr,
+)
+from ..relational.table import DATE, date_to_days
+from .lexer import SqlError
+from .nodes import IntervalLit, SqlCol, TableRef
+
+
+class Catalog:
+    """Table schemas (column → kind) + base-cardinality estimates."""
+
+    def __init__(self, schema: Dict[str, Dict[str, str]],
+                 rows: Optional[Dict[str, float]] = None):
+        self.schema = schema
+        self.rows = dict(rows or {})
+
+    @staticmethod
+    def tpch(scale_factor: float = 1.0) -> "Catalog":
+        rows = {t: max(r * scale_factor, 1.0) if t not in ("region", "nation")
+                else float(r) for t, r in TPCH_BASE_ROWS.items()}
+        return Catalog(TPCH_SCHEMA, rows)
+
+    def has_table(self, name: str) -> bool:
+        return name in self.schema
+
+    def columns(self, table: str) -> List[str]:
+        return list(self.schema[table])
+
+    def kind(self, table: str, col: str) -> str:
+        return self.schema[table][col]
+
+    def row_estimate(self, table: str) -> float:
+        return float(self.rows.get(table, 1000.0))
+
+
+DEFAULT_CATALOG = Catalog.tpch()
+
+
+class Scope:
+    """Binding scope: the FROM tables of one SELECT, chained to the parent
+    query's scope for correlated references."""
+
+    def __init__(self, catalog: Catalog, tables: List[TableRef],
+                 parent: Optional["Scope"] = None):
+        self.catalog = catalog
+        self.tables = tables
+        self.parent = parent
+        self.by_alias: Dict[str, str] = {}
+        self.col_table: Dict[str, str] = {}   # column name -> providing table
+        seen_tables = set()
+        for t in tables:
+            if not catalog.has_table(t.name):
+                raise SqlError(f"unknown table {t.name!r}")
+            if t.name in seen_tables:
+                raise SqlError(
+                    f"table {t.name!r} appears twice in FROM; self-joins are "
+                    "not supported by the SQL frontend")
+            seen_tables.add(t.name)
+            if t.binding_name in self.by_alias:
+                raise SqlError(f"duplicate table alias {t.binding_name!r}")
+            self.by_alias[t.binding_name] = t.name
+            for col in catalog.columns(t.name):
+                if col in self.col_table:
+                    raise SqlError(f"ambiguous column {col!r}")
+                self.col_table[col] = t.name
+
+    def resolve(self, qualifier: Optional[str], name: str):
+        """→ ("local"|"outer", table, column)."""
+        if qualifier is not None:
+            if qualifier in self.by_alias:
+                table = self.by_alias[qualifier]
+                if name not in self.catalog.schema[table]:
+                    raise SqlError(f"column {name!r} not in table {table!r}")
+                return "local", table, name
+            if self.parent is not None:
+                kind, table, col = self.parent.resolve(qualifier, name)
+                return "outer", table, col
+            raise SqlError(f"unknown table alias {qualifier!r}")
+        if name in self.col_table:
+            return "local", self.col_table[name], name
+        if self.parent is not None:
+            kind, table, col = self.parent.resolve(None, name)
+            return "outer", table, col
+        raise SqlError(f"unknown column {name!r}")
+
+    def kind_of(self, name: str) -> Optional[str]:
+        t = self.col_table.get(name)
+        return self.catalog.kind(t, name) if t else None
+
+
+# ---------------------------------------------------------------------------
+# binding rewrites
+# ---------------------------------------------------------------------------
+
+_DATE_INTERVAL_OPS = ("+", "-")
+
+
+def _shift_date(days: int, amount: int, unit: str) -> int:
+    import calendar
+    import datetime
+
+    d = datetime.date(1970, 1, 1) + datetime.timedelta(days=int(days))
+    if unit == "day":
+        return int(days) + amount
+    months = amount * (12 if unit == "year" else 1)
+    total = d.year * 12 + (d.month - 1) + months
+    y, m = divmod(total, 12)
+    m += 1
+    # SQL semantics: clamp to the target month's last day (Jan 31 + 1 month
+    # is Feb 28/29, not an error)
+    day = min(d.day, calendar.monthrange(y, m)[1])
+    return date_to_days(f"{y:04d}-{m:02d}-{day:02d}")
+
+
+def _parse_date(s: str) -> Optional[int]:
+    """'1995-03-15' (or unpadded '1995-3-15') → days since epoch, else None."""
+    import datetime
+
+    parts = s.split("-")
+    if len(parts) != 3:
+        return None
+    try:
+        d = datetime.date(int(parts[0]), int(parts[1]), int(parts[2]))
+    except ValueError:
+        return None
+    return date_to_days(d.isoformat())
+
+
+def _date_lit(s: str) -> Lit:
+    days = _parse_date(s)
+    if days is None:
+        raise SqlError(f"cannot compare a DATE column with non-date string "
+                       f"{s!r}")
+    return Lit(days, DATE)
+
+
+def bind_expr(expr: Expr, scope: Scope) -> Expr:
+    """Resolve columns and fold date arithmetic.  Subquery nodes are left in
+    place (the lowering pass recurses into them with a child scope)."""
+    from .nodes import OuterCol, SqlExists, SqlInSubquery, SqlSubquery
+
+    def visit(e: Expr) -> Expr:
+        if isinstance(e, SqlCol):
+            where, _table, col = scope.resolve(e.qualifier, e.name)
+            return Col(col) if where == "local" else OuterCol(col)
+        if isinstance(e, SqlInSubquery):
+            # operand is bound; the subquery select binds during lowering
+            return e
+        if isinstance(e, (SqlSubquery, SqlExists)):
+            return e
+        if isinstance(e, BinOp):
+            # fold: date_lit ± interval
+            if e.op in _DATE_INTERVAL_OPS:
+                l, r = e.left, e.right
+                if isinstance(l, Lit) and l.kind == DATE \
+                        and isinstance(r, IntervalLit):
+                    sign = 1 if e.op == "+" else -1
+                    return Lit(_shift_date(l.value, sign * r.amount, r.unit),
+                               DATE)
+            # coerce: DATE column compared against a string literal — a
+            # non-date string here is always a type error, never a silent
+            # raw-string comparison
+            if e.op in ("==", "!=", "<", "<=", ">", ">="):
+                l, r = e.left, e.right
+                if isinstance(l, Col) and scope.kind_of(l.name) == DATE \
+                        and isinstance(r, Lit) and isinstance(r.value, str):
+                    return BinOp(e.op, l, _date_lit(r.value))
+                if isinstance(r, Col) and scope.kind_of(r.name) == DATE \
+                        and isinstance(l, Lit) and isinstance(l.value, str):
+                    return BinOp(e.op, _date_lit(l.value), r)
+            return e
+        if isinstance(e, Between):
+            v = e.operand
+            if isinstance(v, Col) and scope.kind_of(v.name) == DATE:
+                lo, hi = e.lo, e.hi
+                changed = False
+                if isinstance(lo, Lit) and isinstance(lo.value, str):
+                    lo, changed = _date_lit(lo.value), True
+                if isinstance(hi, Lit) and isinstance(hi.value, str):
+                    hi, changed = _date_lit(hi.value), True
+                if changed:
+                    return Between(v, lo, hi)
+            return e
+        if isinstance(e, IntervalLit):
+            return e                 # consumed by the BinOp fold above
+        return e
+
+    bound = transform_expr(expr, visit)
+    for node in _walk_shallow(bound):
+        if isinstance(node, IntervalLit):
+            raise SqlError("INTERVAL is only supported added to/subtracted "
+                           "from a DATE literal")
+    return bound
+
+
+def _walk_shallow(e: Expr):
+    from ..relational.expressions import walk_expr
+    yield from walk_expr(e)

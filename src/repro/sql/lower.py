@@ -1,0 +1,454 @@
+"""AST → plan-IR lowering (the "standard plan" half of the drop-in pipeline).
+
+Produces a deliberately *naive* plan — full-width table scans, the join tree
+in FROM/connectivity order, and every non-join predicate in one FilterRel
+above the joins — so that the rule-based optimizer (repro.optimizer) is the
+component that earns predicate pushdown, projection pruning, join ordering
+and build-side selection, exactly as DuckDB's optimizer does in front of
+Sirius.
+
+Subquery handling mirrors the rewrites DuckDB applies before emitting
+Substrait:
+  * ``x IN (SELECT ...)``     → semi join   (NOT IN → anti join)
+  * ``EXISTS (SELECT ...)``   → semi join on the correlated equality keys
+    (NOT EXISTS → anti join); only equality correlation is supported,
+  * uncorrelated scalar subqueries → ``ScalarSubquery`` nodes, executed
+    first by the engine and bound as literals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Set, Tuple
+
+from ..core.plan import (
+    AggregateRel, FetchRel, FilterRel, JoinRel, ProjectRel, ReadRel, Rel,
+    ScalarSubquery, SortRel,
+)
+from ..relational.aggregate import AggSpec
+from ..relational.expressions import (
+    BinOp, Col, Expr, and_all, expr_equal, split_conjuncts, transform_expr,
+    walk_expr,
+)
+from ..relational.sort import SortKey
+from .binder import Catalog, DEFAULT_CATALOG, Scope, bind_expr
+from .lexer import SqlError
+from .nodes import (
+    OrderItem, OuterCol, SelectItem, SelectStmt, SqlCol, SqlExists, SqlFunc,
+    SqlInSubquery, SqlSubquery, Star,
+)
+
+_AGG_FN_MAP = {"sum": "sum", "avg": "avg", "min": "min", "max": "max",
+               "count": "count"}
+
+
+def _contains(e: Expr, types) -> bool:
+    return any(isinstance(n, types) for n in walk_expr(e))
+
+
+def _cols_of(e: Expr) -> List[str]:
+    return [n.name for n in walk_expr(e) if isinstance(n, Col)]
+
+
+def _outer_cols_of(e: Expr) -> List[str]:
+    return [n.name for n in walk_expr(e) if isinstance(n, OuterCol)]
+
+
+class _Lowering:
+    def __init__(self, catalog: Catalog):
+        self.catalog = catalog
+        self._names = itertools.count()
+
+    def fresh(self, prefix: str) -> str:
+        return f"__{prefix}{next(self._names)}"
+
+    # ------------------------------------------------------------------
+    def lower(self, stmt: SelectStmt, outer: Optional[Scope] = None,
+              for_exists: bool = False):
+        """→ (plan, output column names, correlations).
+
+        ``correlations`` is a list of (outer_col, inner_col) equality pairs
+        extracted from the WHERE clause; non-empty only when ``outer`` is
+        given and the subquery is correlated.
+        """
+        scope = Scope(self.catalog, stmt.from_tables, parent=outer)
+
+        where = bind_expr(stmt.where, scope) if stmt.where is not None \
+            else None
+        conjuncts = split_conjuncts(where)
+
+        correlations: List[Tuple[str, str]] = []
+        plain: List[Expr] = []
+        sub_joins: List[Expr] = []       # IN/EXISTS subquery conjuncts
+        for c in conjuncts:
+            if isinstance(c, (SqlExists, SqlInSubquery)):
+                sub_joins.append(c)
+                continue
+            outer_refs = _outer_cols_of(c)
+            if outer_refs:
+                pair = self._correlation_pair(c)
+                if pair is None:
+                    raise SqlError(
+                        "only equality correlation (inner_col = outer_col) "
+                        "is supported in subqueries")
+                correlations.append(pair)
+                continue
+            plain.append(self._lower_scalar_subqueries(c, scope))
+
+        # -- join tree over the FROM tables -----------------------------
+        plan, available = self._join_tree(stmt.from_tables, plain, scope)
+
+        # -- IN / EXISTS subqueries → semi/anti joins --------------------
+        for c in sub_joins:
+            plan = self._lower_sub_join(plan, c, scope)
+
+        # -- residual predicates (single FilterRel; optimizer pushes) ----
+        residual = and_all(plain)
+        if residual is not None:
+            plan = FilterRel(plan, residual)
+
+        if for_exists:
+            return plan, list(available), correlations
+
+        # -- select items / aggregation ----------------------------------
+        items = self._expand_items(stmt.items, available)
+        bound_items = [SelectItem(bind_expr(it.expr, scope), it.alias)
+                       for it in items]
+        alias_map = {it.alias: it.expr for it in bound_items if it.alias}
+
+        group_exprs = self._bind_group_by(stmt.group_by, scope, alias_map)
+        has_agg = bool(group_exprs) or any(
+            _contains(it.expr, SqlFunc) for it in bound_items)
+        having = None
+        if stmt.having is not None:
+            having = bind_expr(stmt.having, scope)
+            having = self._subst_aliases(having, alias_map)
+            has_agg = True
+
+        out_names: List[str] = []
+        out_exprs: List[Tuple[str, Expr]] = []
+
+        if has_agg:
+            plan, key_names, rewrite = self._build_aggregate(
+                plan, group_exprs, bound_items, having, scope)
+            for i, it in enumerate(bound_items):
+                name = it.alias or self._default_name(it.expr, i)
+                out_exprs.append((name, rewrite(it.expr)))
+                out_names.append(name)
+        else:
+            for i, it in enumerate(bound_items):
+                e = self._lower_scalar_subqueries(it.expr, scope)
+                name = it.alias or self._default_name(e, i)
+                out_exprs.append((name, e))
+                out_names.append(name)
+
+        if len(set(out_names)) != len(out_names):
+            raise SqlError(f"duplicate output column names: {out_names}")
+        plan = ProjectRel(plan, out_exprs)
+
+        if stmt.distinct:
+            plan = AggregateRel(plan, list(out_names), [])
+
+        # -- order by / limit --------------------------------------------
+        if stmt.order_by:
+            keys = [self._sort_key(o, out_exprs, scope) for o in stmt.order_by]
+            plan = SortRel(plan, keys, limit=stmt.limit)
+        elif stmt.limit is not None:
+            plan = FetchRel(plan, stmt.limit)
+
+        return plan, out_names, correlations
+
+    # ------------------------------------------------------------------
+    def _correlation_pair(self, c: Expr) -> Optional[Tuple[str, str]]:
+        if isinstance(c, BinOp) and c.op == "==":
+            l, r = c.left, c.right
+            if isinstance(l, Col) and isinstance(r, OuterCol):
+                return (r.name, l.name)
+            if isinstance(l, OuterCol) and isinstance(r, Col):
+                return (l.name, r.name)
+        return None
+
+    def _lower_scalar_subqueries(self, e: Expr, scope: Scope) -> Expr:
+        def visit(node: Expr) -> Expr:
+            if isinstance(node, SqlSubquery):
+                plan, cols, corr = self.lower(node.select, outer=scope)
+                if corr:
+                    raise SqlError(
+                        "correlated scalar subqueries are not supported")
+                if len(cols) != 1:
+                    raise SqlError(
+                        "scalar subquery must produce exactly one column")
+                return ScalarSubquery(plan, cols[0])
+            return node
+        return transform_expr(e, visit)
+
+    def _join_tree(self, tables, plain: List[Expr], scope: Scope):
+        """Greedy connectivity join over the FROM list.  Consumes the
+        cross-table equality conjuncts from ``plain``."""
+        def table_cols(name: str) -> Set[str]:
+            return set(self.catalog.columns(name))
+
+        def is_equi(c: Expr) -> Optional[Tuple[str, str]]:
+            if isinstance(c, BinOp) and c.op == "==" \
+                    and isinstance(c.left, Col) and isinstance(c.right, Col):
+                lt = scope.col_table.get(c.left.name)
+                rt = scope.col_table.get(c.right.name)
+                if lt and rt and lt != rt:
+                    return (c.left.name, c.right.name)
+            return None
+
+        # NB: never use list.remove / `in` on Expr lists — Expr.__eq__ builds
+        # a BinOp (truthy), so equality-based removal hits the wrong element
+        equi: List[Tuple[Expr, str, str]] = []
+        rest: List[Expr] = []
+        for c in plain:
+            pair = is_equi(c)
+            if pair is not None:
+                equi.append((c, *pair))
+            else:
+                rest.append(c)
+        plain[:] = rest
+
+        plan: Rel = ReadRel(tables[0].name)
+        available = table_cols(tables[0].name)
+        remaining = list(tables[1:])
+        while remaining:
+            picked = None
+            for t in remaining:
+                tcols = table_cols(t.name)
+                keys = [(a, b) if a in available else (b, a)
+                        for _, a, b in equi
+                        if (a in available and b in tcols)
+                        or (b in available and a in tcols)]
+                if keys:
+                    picked = (t, keys)
+                    break
+            if picked is None:
+                raise SqlError(
+                    f"disconnected join graph: no equality predicate links "
+                    f"{[t.name for t in remaining]} to the joined tables "
+                    "(cross joins are not supported)")
+            t, keys = picked
+            probe_keys = [k[0] for k in keys]
+            build_keys = [k[1] for k in keys]
+            plan = JoinRel(plan, ReadRel(t.name), probe_keys, build_keys,
+                           "inner")
+            available |= table_cols(t.name)
+            used = {(a, b) for a, b in zip(probe_keys, build_keys)}
+            equi = [e for e in equi
+                    if (e[1], e[2]) not in used and (e[2], e[1]) not in used]
+            remaining.remove(t)
+        # equality conjuncts that never linked a new table (both sides were
+        # already available) stay as residual filters
+        plain.extend(c for c, _a, _b in equi)
+        return plan, available
+
+    def _lower_sub_join(self, plan: Rel, c: Expr, scope: Scope) -> Rel:
+        if isinstance(c, SqlInSubquery):
+            operand = bind_expr(c.operand, scope)
+            if not isinstance(operand, Col):
+                raise SqlError("IN (SELECT ...) requires a plain column on "
+                               "the left-hand side")
+            sub_plan, sub_cols, corr = self.lower(c.select, outer=scope)
+            if corr:
+                raise SqlError("correlated IN subqueries are not supported")
+            if len(sub_cols) != 1:
+                raise SqlError("IN subquery must produce exactly one column")
+            how = "anti" if c.negate else "semi"
+            return JoinRel(plan, sub_plan, [operand.name], [sub_cols[0]], how)
+        assert isinstance(c, SqlExists)
+        sub_plan, _cols, corr = self.lower(c.select, outer=scope,
+                                           for_exists=True)
+        if not corr:
+            raise SqlError("EXISTS subquery must be correlated with the "
+                           "outer query through an equality predicate")
+        probe_keys = [outer for outer, _ in corr]
+        build_keys = [inner for _, inner in corr]
+        how = "anti" if c.negate else "semi"
+        return JoinRel(plan, sub_plan, probe_keys, build_keys, how)
+
+    # ------------------------------------------------------------------
+    def _expand_items(self, items: List[SelectItem], available: Set[str]):
+        out = []
+        for it in items:
+            if isinstance(it.expr, Star):
+                out.extend(SelectItem(SqlCol(None, c)) for c in
+                           sorted(available))
+            else:
+                out.append(it)
+        return out
+
+    def _bind_group_by(self, group_by, scope: Scope, alias_map):
+        """→ list of (key_name, bound_expr)."""
+        out: List[Tuple[str, Expr]] = []
+        for i, g in enumerate(group_by):
+            alias_name = None
+            if isinstance(g, SqlCol) and g.qualifier is None \
+                    and g.name in alias_map:
+                alias_name = g.name
+                bound = alias_map[g.name]
+            else:
+                bound = bind_expr(g, scope)
+            if isinstance(bound, Col):
+                out.append((bound.name, bound))
+                continue
+            # expression key: name it after the select alias when one matches
+            name = alias_name
+            if name is None:
+                for a, e in alias_map.items():
+                    if expr_equal(e, bound):
+                        name = a
+                        break
+            out.append((name or self.fresh("key"), bound))
+        return out
+
+    def _subst_aliases(self, e: Expr, alias_map) -> Expr:
+        def visit(node: Expr) -> Expr:
+            if isinstance(node, SqlCol) and node.qualifier is None \
+                    and node.name in alias_map:
+                return alias_map[node.name]
+            return node
+        return transform_expr(e, visit)
+
+    def _default_name(self, e: Expr, i: int) -> str:
+        if isinstance(e, Col):
+            return e.name
+        return f"col{i}"
+
+    def _build_aggregate(self, plan: Rel, group_exprs, bound_items,
+                         having, scope: Scope):
+        """Insert (pre-projection?) + AggregateRel; returns a rewriter that
+        maps post-aggregation expressions onto the aggregate's output."""
+        # pre-projection for expression-valued group keys
+        pre: List[Tuple[str, Expr]] = []
+        key_names: List[str] = []
+        for name, e in group_exprs:
+            key_names.append(name)
+            if not isinstance(e, Col):
+                pre.append((name, e))
+        if pre:
+            plan = ProjectRel(plan, pre, keep_input=True)
+
+        aggs: List[AggSpec] = []
+
+        def agg_name_for(fn_node: SqlFunc, preferred: Optional[str]) -> str:
+            fn = _AGG_FN_MAP[fn_node.name]
+            if fn_node.name == "count" and fn_node.arg is None:
+                fn = "count_star"
+            elif fn_node.name == "count" and fn_node.distinct:
+                fn = "count_distinct"
+            arg = None
+            if fn_node.arg is not None:
+                arg = self._lower_scalar_subqueries(fn_node.arg, scope)
+            for spec in aggs:
+                if spec.fn == fn and expr_equal(spec.expr, arg):
+                    return spec.name
+            name = preferred or self.fresh("agg")
+            if any(a.name == name for a in aggs):
+                name = self.fresh("agg")
+            aggs.append(AggSpec(fn, arg, name))
+            return name
+
+        # seed the agg list from the select items so single-agg items keep
+        # their SQL alias as the aggregate's output name
+        for it in bound_items:
+            if isinstance(it.expr, SqlFunc) and it.alias:
+                agg_name_for(it.expr, it.alias)
+
+        rewritten_having = None
+        if having is not None:
+            rewritten_having = self._rewrite_post_agg(
+                having, group_exprs, agg_name_for, None)
+            # alias refs to agg outputs: SqlCol(alias) already substituted by
+            # _subst_aliases; plain Col refs to agg names pass through
+            bad = [c for c in _cols_of(rewritten_having)
+                   if c not in key_names
+                   and not any(a.name == c for a in aggs)]
+            if bad:
+                raise SqlError(f"HAVING references non-aggregated columns "
+                               f"{bad}")
+            rewritten_having = self._lower_scalar_subqueries(
+                rewritten_having, scope)
+
+        agg_rel = AggregateRel(plan, key_names, aggs, having=rewritten_having)
+
+        def rewrite(e: Expr) -> Expr:
+            out = self._rewrite_post_agg(e, group_exprs, agg_name_for, None)
+            out = self._lower_scalar_subqueries(out, scope)
+            bad = [c for c in _cols_of(out)
+                   if c not in key_names
+                   and not any(a.name == c for a in agg_rel.aggs)]
+            if bad:
+                raise SqlError(
+                    f"column(s) {bad} must appear in GROUP BY or inside an "
+                    "aggregate function")
+            return out
+
+        return agg_rel, key_names, rewrite
+
+    def _rewrite_post_agg(self, e: Expr, group_exprs, agg_name_for,
+                          preferred):
+        """Top-down: SqlFunc subtrees → Col(agg name); group-key-matching
+        subtrees → Col(key name)."""
+        if isinstance(e, SqlFunc):
+            return Col(agg_name_for(e, preferred))
+        for name, ge in group_exprs:
+            if expr_equal(e, ge):
+                return Col(name)
+        if not dataclasses.is_dataclass(e):
+            return e
+        changes = {}
+        for f in dataclasses.fields(e):
+            v = getattr(e, f.name)
+            if isinstance(v, Expr):
+                nv = self._rewrite_post_agg(v, group_exprs, agg_name_for,
+                                            None)
+                if nv is not v:
+                    changes[f.name] = nv
+            elif isinstance(v, (list, tuple)) and not isinstance(v, str):
+                new_items, dirty = [], False
+                for item in v:
+                    if isinstance(item, Expr):
+                        ni = self._rewrite_post_agg(item, group_exprs,
+                                                    agg_name_for, None)
+                        dirty |= ni is not item
+                        new_items.append(ni)
+                    elif isinstance(item, tuple):
+                        ni = tuple(
+                            self._rewrite_post_agg(x, group_exprs,
+                                                   agg_name_for, None)
+                            if isinstance(x, Expr) else x for x in item)
+                        dirty |= any(a is not b for a, b in zip(ni, item))
+                        new_items.append(ni)
+                    else:
+                        new_items.append(item)
+                if dirty:
+                    changes[f.name] = new_items
+        return dataclasses.replace(e, **changes) if changes else e
+
+    def _sort_key(self, o: OrderItem, out_exprs, scope: Scope) -> SortKey:
+        e = o.expr
+        # a bare identifier naming an output column (alias or plain column)
+        if isinstance(e, SqlCol) and e.qualifier is None:
+            for name, _ in out_exprs:
+                if name == e.name:
+                    return SortKey(name, o.ascending)
+        bound = bind_expr(e, scope)
+        if isinstance(bound, Col):
+            for name, oe in out_exprs:
+                if isinstance(oe, Col) and oe.name == bound.name \
+                        or name == bound.name:
+                    return SortKey(name, o.ascending)
+        for name, oe in out_exprs:
+            if expr_equal(oe, bound):
+                return SortKey(name, o.ascending)
+        raise SqlError(
+            "ORDER BY must reference an output column of the SELECT list")
+
+
+def lower_select(stmt: SelectStmt, catalog: Optional[Catalog] = None) -> Rel:
+    """Lower a bound SELECT statement to a (naive, unoptimized) plan."""
+    catalog = catalog or DEFAULT_CATALOG
+    plan, _cols, corr = _Lowering(catalog).lower(stmt)
+    assert not corr
+    return plan

@@ -9,8 +9,8 @@ import pytest
 
 from repro.core.executor import SiriusEngine
 from repro.core.fallback import FallbackEngine
-from repro.core.plan import plan_from_json, plan_to_json
-from repro.data.tpch_queries import QUERIES
+from repro.core.plan import plan_equal, plan_from_json, plan_to_json
+from repro.data.tpch_queries import QUERIES, SQL_QUERIES
 
 from conftest import assert_tables_equal
 
@@ -29,6 +29,34 @@ def test_plan_json_roundtrip(qid):
     s = plan_to_json(plan)
     plan2 = plan_from_json(s)
     assert plan_to_json(plan2) == s
+
+
+@pytest.mark.parametrize("qid", sorted(QUERIES))
+def test_plan_json_roundtrip_structural(qid):
+    """The Substrait wire format at query scale: decode(encode(plan)) must be
+    structurally identical to the plan, not just re-serialize identically."""
+    plan = QUERIES[qid]()
+    restored = plan_from_json(plan_to_json(plan))
+    assert plan_equal(restored, plan)
+    assert plan_equal(plan, QUERIES[qid]())      # builders are deterministic
+
+
+@pytest.mark.parametrize("qid", sorted(QUERIES))
+def test_optimized_plan_json_roundtrip_structural(qid):
+    """Optimizer output must survive the process boundary too — that is the
+    handoff the paper's host-DB → engine split actually ships."""
+    from repro.optimizer import optimize
+    plan = optimize(QUERIES[qid]())
+    restored = plan_from_json(plan_to_json(plan))
+    assert plan_equal(restored, plan)
+
+
+@pytest.mark.parametrize("qid", sorted(SQL_QUERIES))
+def test_sql_plan_json_roundtrip_structural(qid):
+    from repro.sql import sql_to_plan
+    plan = sql_to_plan(SQL_QUERIES[qid])
+    restored = plan_from_json(plan_to_json(plan))
+    assert plan_equal(restored, plan)
 
 
 def test_nonempty_results(tpch_engine):
