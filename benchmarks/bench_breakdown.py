@@ -3,7 +3,12 @@
 The paper's finding: joins dominate join-heavy queries (Q2-Q5, Q7-Q8,
 Q20-Q22), group-by matters for Q1/Q10/Q16/Q18, filters dominate Q6/Q19/Q13.
 This benchmark reports the same decomposition from the pipeline executor's
-per-operator timers and checks the headline pattern.
+per-operator timers (``profile=True`` — the only mode that inserts per-op
+barriers) and checks the headline pattern.
+
+It also runs every query once on the *default* fused engine under the
+host-transfer counter, proving the compiled data path keeps columns
+device-resident end to end (the §3.2 residency claim as a number: 0).
 """
 from __future__ import annotations
 
@@ -11,12 +16,13 @@ CATS = ("filter", "join", "groupby", "orderby", "project", "other")
 
 
 def run(scale_factor: float = 0.02):
+    from repro.core import instrument
     from repro.core.executor import SiriusEngine
     from repro.data.tpch import generate, load_into_engine
     from repro.data.tpch_queries import QUERIES
 
     db = generate(scale_factor)
-    eng = SiriusEngine()
+    eng = SiriusEngine(profile=True)
     load_into_engine(eng, db)
 
     print("name,us_per_call,derived")
@@ -37,6 +43,18 @@ def run(scale_factor: float = 0.02):
     join_heavy = [q for q in (3, 5, 7, 8, 9, 10, 21) if dominant[q] == "join"]
     print(f"breakdown_summary,0,join_dominant_in={len(join_heavy)}of7_joinheavy"
           f";q6_dominant={dominant[6]};q1_groupby_or_filter={dominant[1]}")
+
+    # device residency on the default fused engine: must read 0 transfers
+    fused = SiriusEngine()
+    load_into_engine(fused, db)
+    for qid in sorted(QUERIES):
+        fused.execute(QUERIES[qid]())            # warm/compile
+    with instrument.track_transfers() as counter:
+        for qid in sorted(QUERIES):
+            fused.execute(QUERIES[qid]())
+    print(f"breakdown_host_transfers,{counter.in_pipeline},"
+          f"in_pipeline={counter.in_pipeline};total={counter.total};"
+          f"regions={fused.compiler.stats['region_calls']}")
     return dominant
 
 

@@ -9,19 +9,21 @@ bench_costmodel.py.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
 
-def run(scale_factor: float = 0.02, repeats: int = 2):
+def run(scale_factor: float = 0.02, repeats: int = 2,
+        json_path: str | None = None, use_kernels: bool = False):
     from repro.core.executor import SiriusEngine
     from repro.core.fallback import FallbackEngine
     from repro.data.tpch import generate, load_into_engine
     from repro.data.tpch_queries import QUERIES
 
     db = generate(scale_factor)
-    eng = SiriusEngine()
+    eng = SiriusEngine(use_kernels=use_kernels)
     t0 = time.perf_counter()
     load_into_engine(eng, db)
     cold_load_s = time.perf_counter() - t0
@@ -54,6 +56,41 @@ def run(scale_factor: float = 0.02, repeats: int = 2):
     geo = float(np.exp(np.mean([np.log(r[2] / r[1]) for r in rows])))
     print(f"tpch_total_engine,{tot_e*1e6:.0f},total_ratio={tot_f/tot_e:.2f}x")
     print(f"tpch_total_hostbaseline,{tot_f*1e6:.0f},geomean_ratio={geo:.2f}x")
+
+    if json_path:
+        # the perf-trajectory artifact tracked from PR 2 onward: per-query
+        # wall time plus kernel/fallback hit counts.  Timings come from the
+        # engine configured above (default: fused jnp path — the number that
+        # must never regress); kernel-route hit counts are sampled from a
+        # use_kernels engine on representative queries when the timed engine
+        # doesn't carry a backend (interpret-mode kernels are exact but slow
+        # on CPU-only containers, so they are not the timed path here).
+        kernel_hits = (eng.backend.hit_counts()
+                       if eng.backend is not None else {})
+        if eng.backend is None:
+            keng = SiriusEngine(use_kernels=True)
+            load_into_engine(keng, db)
+            for qid in (1, 3, 6):
+                keng.execute(QUERIES[qid]())
+            kernel_hits = keng.backend.hit_counts()
+            kernel_hits["sampled_queries"] = [1, 3, 6]
+        payload = {
+            "scale_factor": scale_factor,
+            "repeats": repeats,
+            "use_kernels": use_kernels,
+            "cold_load_s": round(cold_load_s, 4),
+            "queries": {f"q{qid}": {"engine_s": round(t_eng, 6),
+                                    "host_s": round(t_fb, 6)}
+                        for qid, t_eng, t_fb in rows},
+            "total_engine_s": round(tot_e, 6),
+            "total_host_s": round(tot_f, 6),
+            "kernel_hits": kernel_hits,
+            "fallback_queries": eng.executor.fallback_queries,
+            "compiler": dict(eng.compiler.stats),
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
     return rows
 
 

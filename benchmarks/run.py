@@ -72,7 +72,8 @@ def main() -> None:
     from . import (bench_breakdown, bench_costmodel, bench_distributed,
                    bench_tpch_single, roofline)
     sections = {
-        "tpch_single": lambda: bench_tpch_single.run(),
+        "tpch_single": lambda: bench_tpch_single.run(
+            json_path="BENCH_tpch.json"),
         "breakdown": lambda: bench_breakdown.run(),
         "distributed": lambda: bench_distributed.run(),
         "costmodel": lambda: bench_costmodel.run(),

@@ -49,6 +49,11 @@ class BufferManager:
         self.processing_peak = 0
         self.spill_count = 0
         self.promote_count = 0
+        # host<->device traffic ledger: after the cold-run deep copy, the
+        # only legitimate crossings are spills/promotions — pipeline
+        # execution itself must contribute nothing (see core.instrument)
+        self.cold_copy_bytes = 0
+        self.host_transfer_bytes = 0
 
     # -- caching region -----------------------------------------------------
     def cache_table(self, name: str, table: Table) -> Table:
@@ -63,6 +68,7 @@ class BufferManager:
             self.caching_used -= self._cache[name].nbytes
         self._cache[name] = _CacheEntry(dev, nbytes)
         self.caching_used += nbytes
+        self.cold_copy_bytes += nbytes
         return dev
 
     def get(self, name: str) -> Table:
@@ -104,6 +110,7 @@ class BufferManager:
         e.on_device = False
         self.caching_used -= e.nbytes
         self.spill_count += 1
+        self.host_transfer_bytes += e.nbytes
 
     def _promote(self, name: str, e: _CacheEntry) -> None:
         self._make_room(e.nbytes)
@@ -116,6 +123,7 @@ class BufferManager:
         e.on_device = True
         self.caching_used += e.nbytes
         self.promote_count += 1
+        self.host_transfer_bytes += e.nbytes
 
     # -- processing region ----------------------------------------------------
     def alloc_processing(self, nbytes: int) -> None:
@@ -136,5 +144,7 @@ class BufferManager:
             processing_peak=self.processing_peak,
             spills=self.spill_count,
             promotions=self.promote_count,
+            cold_copy_bytes=self.cold_copy_bytes,
+            host_transfer_bytes=self.host_transfer_bytes,
             cached_tables=sorted(self._cache),
         )

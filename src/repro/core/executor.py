@@ -8,7 +8,15 @@ pipeline execution is **push-based**: the executor owns all state (build
 tables, partial agg inputs) and pushes morsels into stateless operator
 callables.
 
-Per-operator wall time is accumulated for the Figure-5 breakdown benchmark.
+Two execution modes (DESIGN.md "Compiled pipelines & device residency"):
+
+* **default** — each pipeline's contiguous Filter/Project/Probe chain is
+  fused into a single jitted region by ``pipeline_compiler`` (cached across
+  queries by plan signature), operators dispatch asynchronously, and the
+  executor syncs **once per pipeline sink**;
+* **profile=True** — the pre-fusion path: every operator runs eagerly with a
+  ``block_until_ready`` barrier and per-operator wall time accumulated for
+  the Figure-5 breakdown benchmark.
 """
 from __future__ import annotations
 
@@ -29,6 +37,8 @@ from ..relational.expressions import Expr, Lit, evaluate
 from ..relational.join import hash_join
 from ..relational.sort import sort_table
 from ..relational.table import BOOL, Column, Table
+from . import instrument
+from .pipeline_compiler import PipelineCompiler
 from .plan import (
     AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
     ReadRel, Rel, ScalarSubquery, SortRel, walk,
@@ -75,6 +85,19 @@ class ProjectOp(_Op):
         for name, e in self.exprs:
             cols[name] = evaluate(e, t)
         return Table(cols)
+
+
+class SelectOp(_Op):
+    """Column pruning as a pipeline op (deferred ReadRel projection: the
+    scan keeps filter columns alive until the fused filter consumed them)."""
+
+    category = "project"
+
+    def __init__(self, columns):
+        self.columns = list(columns)
+
+    def __call__(self, t: Table) -> Table:
+        return t.select([c for c in self.columns if c in t])
 
 
 class ProbeOp(_Op):
@@ -140,13 +163,20 @@ class BuildSink(_Sink):
 class AggSink(_Sink):
     category = "groupby"
 
-    def __init__(self, result: _Result, rel: AggregateRel):
+    def __init__(self, result: _Result, rel: AggregateRel, backend=None):
         super().__init__(result)
         self.rel = rel
+        self.backend = backend
 
     def finalize(self) -> None:
         t = self._gathered()
-        out = group_aggregate(t, self.rel.group_keys, self.rel.aggs)
+        out = None
+        if self.backend is not None:
+            # MXU one-hot-matmul aggregation for eligible group-bys
+            out = self.backend.try_aggregate(t, self.rel.group_keys,
+                                             self.rel.aggs)
+        if out is None:
+            out = group_aggregate(t, self.rel.group_keys, self.rel.aggs)
         if self.rel.having is not None:
             mask = evaluate(self.rel.having, out)
             out = out.filter_mask(mask.data)
@@ -231,10 +261,10 @@ class PlanLowering:
         if isinstance(rel, AggregateRel):
             child = self._stream(rel.input)
             if child.sink is None:
-                child.sink = AggSink(_Result(), rel)
+                child.sink = AggSink(_Result(), rel, self.backend)
             else:  # child already materialized; chain a fresh pipeline
                 mid = self.new_pipeline(child.sink.result, [child.pid])
-                mid.sink = AggSink(_Result(), rel)
+                mid.sink = AggSink(_Result(), rel, self.backend)
                 child = mid
             out = self.new_pipeline(child.sink.result, [child.pid])
             return out
@@ -268,11 +298,15 @@ class PipelineExecutor:
     """Global task queue + worker threads pulling ready pipelines."""
 
     def __init__(self, buffers: BufferManager, num_workers: int = 2,
-                 morsel_rows: Optional[int] = None, backend=None):
+                 morsel_rows: Optional[int] = None, backend=None,
+                 profile: bool = False, compile_pipelines: bool = True):
         self.buffers = buffers
         self.num_workers = num_workers
         self.morsel_rows = morsel_rows
         self.backend = backend
+        self.profile = profile
+        self.compile_pipelines = compile_pipelines
+        self.compiler = PipelineCompiler()
         self.op_times: Dict[str, float] = defaultdict(float)
         self.fallback_queries = 0
 
@@ -361,13 +395,17 @@ class PipelineExecutor:
             t.join(timeout=5)
         if errors:
             raise errors[0]
-        return final.sink.result.table
+        out = final.sink.result.table
+        if out is not None and not self.profile:
+            # the query's single host sync: materialize the result table
+            jax.block_until_ready([c.data for c in out.columns.values()])
+        return out
 
     # -- single pipeline ------------------------------------------------------
-    def _source_table(self, source) -> Table:
+    def _source_table(self, source, skip_filter: bool = False) -> Table:
         if isinstance(source, ReadRel):
             t = self.buffers.get(source.table)
-            if source.filter is not None:
+            if source.filter is not None and not skip_filter:
                 t0 = time.perf_counter()
                 out = (self.backend.try_filter(source.filter, t)
                        if self.backend is not None else None)
@@ -375,9 +413,16 @@ class PipelineExecutor:
                     mask = evaluate(source.filter, t)
                     out = t.filter_mask(mask.data)
                 t = out
-                self.op_times["filter"] += time.perf_counter() - t0
+                if self.profile:
+                    self.op_times["filter"] += time.perf_counter() - t0
             if source.columns:
-                t = t.select([c for c in source.columns if c in t])
+                keep = [c for c in source.columns if c in t]
+                if skip_filter and source.filter is not None:
+                    # deferred filter: its columns ride along until the fused
+                    # region applies the filter and the SelectOp prunes them
+                    keep += [c for c in source.filter.columns()
+                             if c in t and c not in keep]
+                t = t.select(keep)
             return t
         if isinstance(source, _Result):
             assert source.table is not None, "dependency not materialized"
@@ -392,28 +437,66 @@ class PipelineExecutor:
             yield t.take(jnp.arange(lo, min(lo + self.morsel_rows, t.num_rows)))
 
     def _run_pipeline(self, p: Pipeline) -> None:
-        src = self._source_table(p.source)
+        with instrument.pipeline_scope():
+            self._run_pipeline_inner(p)
+
+    def _run_pipeline_inner(self, p: Pipeline) -> None:
+        # pushed-down ReadRel filters join the fused region as its first op
+        # (default mode, no kernel backend — the backend's fused filter
+        # kernel keeps the eager route so its eligibility contract applies)
+        ops = p.ops
+        # only worthwhile when there are downstream ops to fuse with — a
+        # scan-only pipeline pays region padding for no fusion gain
+        fuse_scan_filter = (not self.profile and self.compile_pipelines
+                            and self.backend is None and bool(p.ops)
+                            and isinstance(p.source, ReadRel)
+                            and p.source.filter is not None)
+        if fuse_scan_filter:
+            ops = [FilterOp(p.source.filter)]
+            if p.source.columns:
+                ops.append(SelectOp(p.source.columns))
+            ops += list(p.ops)
+        src = self._source_table(p.source, skip_filter=fuse_scan_filter)
         approx_bytes = max(src.nbytes, 1)
         self.buffers.alloc_processing(approx_bytes)
         try:
+            if self.profile:
+                self._run_profiled(p, src)
+                return
+            # default path: fused regions, fully async dispatch — downstream
+            # pipelines consume the sink's device arrays without a barrier;
+            # the single blocking sync happens at the query's final sink
+            # (see ``execute``)
+            stages = (self.compiler.prepare(ops, self.backend)
+                      if self.compile_pipelines else ops)
             for morsel in self._morsels(src):
                 t = morsel
-                for op in p.ops:
-                    t0 = time.perf_counter()
-                    t = op(t)
-                    jax.block_until_ready([c.data for c in t.columns.values()])
-                    self.op_times[op.category] += time.perf_counter() - t0
-                t0 = time.perf_counter()
+                for stage in stages:
+                    t = stage(t)
                 p.sink.push(t)
-                self.op_times[p.sink.category] += time.perf_counter() - t0
-            t0 = time.perf_counter()
             p.sink.finalize()
-            if p.sink.result.table is not None:
-                jax.block_until_ready(
-                    [c.data for c in p.sink.result.table.columns.values()])
-            self.op_times[p.sink.category] += time.perf_counter() - t0
         finally:
             self.buffers.free_processing(approx_bytes)
+
+    def _run_profiled(self, p: Pipeline, src: Table) -> None:
+        """Pre-fusion path: eager per-op dispatch with a barrier + timer per
+        operator, feeding the Figure-5 breakdown benchmark."""
+        for morsel in self._morsels(src):
+            t = morsel
+            for op in p.ops:
+                t0 = time.perf_counter()
+                t = op(t)
+                jax.block_until_ready([c.data for c in t.columns.values()])
+                self.op_times[op.category] += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            p.sink.push(t)
+            self.op_times[p.sink.category] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        p.sink.finalize()
+        if p.sink.result.table is not None:
+            jax.block_until_ready(
+                [c.data for c in p.sink.result.table.columns.values()])
+        self.op_times[p.sink.category] += time.perf_counter() - t0
 
 
 # ---------------------------------------------------------------------------
@@ -426,7 +509,8 @@ class SiriusEngine:
 
     def __init__(self, caching_bytes: int = 8 << 30, processing_bytes: int = 8 << 30,
                  num_workers: int = 2, morsel_rows: Optional[int] = None,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False, profile: bool = False,
+                 compile_pipelines: bool = True):
         self.buffers = BufferManager(caching_bytes, processing_bytes)
         backend = None
         if use_kernels:
@@ -434,8 +518,14 @@ class SiriusEngine:
             backend = KernelBackend()
         self.backend = backend
         self.executor = PipelineExecutor(self.buffers, num_workers, morsel_rows,
-                                         backend)
+                                         backend, profile=profile,
+                                         compile_pipelines=compile_pipelines)
         self.host_tables: Dict[str, dict] = {}
+
+    @property
+    def compiler(self):
+        """The signature-keyed compiled-pipeline cache (stats live here)."""
+        return self.executor.compiler
 
     def register(self, name: str, table: Table, host_data: Optional[dict] = None):
         self.buffers.cache_table(name, table)

@@ -1,0 +1,76 @@
+"""Host-transfer accounting: prove the data path stays device-resident.
+
+Sirius's core bet is that columns never round-trip through host memory
+mid-query.  This module makes that claim *testable*: ``track_transfers``
+patches ``np.asarray`` (the one gate every device→host materialization in
+this codebase goes through) and counts calls whose argument is a live
+``jax.Array``.  The executor marks pipeline execution via ``pipeline_scope``
+so the counter can distinguish transfers inside the hot path (must be zero)
+from legitimate ones at the result boundary (``Table.to_host``) or during
+scalar-subquery planning.
+
+Scalar syncs (``int(x)``/``bool(x)`` on device scalars — dynamic output
+sizes, eligibility bits) are deliberately *not* counted: they move O(1)
+bytes and are part of the eager-dispatch contract, not a data-path breach.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+class TransferCounter:
+    """Counts device→host column materializations (see module docstring)."""
+
+    def __init__(self):
+        self.total = 0            # all np.asarray(jax.Array) calls
+        self.in_pipeline = 0      # …of which inside pipeline execution
+
+    def reset(self) -> None:
+        self.total = 0
+        self.in_pipeline = 0
+
+
+_local = threading.local()
+
+
+def _depth() -> int:
+    return getattr(_local, "pipeline_depth", 0)
+
+
+@contextlib.contextmanager
+def pipeline_scope() -> Iterator[None]:
+    """Marks the current thread as executing a pipeline (worker threads)."""
+    _local.pipeline_depth = _depth() + 1
+    try:
+        yield
+    finally:
+        _local.pipeline_depth = _depth() - 1
+
+
+@contextlib.contextmanager
+def track_transfers() -> Iterator[TransferCounter]:
+    """Count device→host materializations until the context exits.
+
+    Patches ``np.asarray`` process-wide (tests and benchmarks only — not a
+    production mode); nesting is not supported.
+    """
+    counter = TransferCounter()
+    orig = np.asarray
+
+    def counting_asarray(a, *args, **kwargs):
+        if isinstance(a, jax.Array):
+            counter.total += 1
+            if _depth() > 0:
+                counter.in_pipeline += 1
+        return orig(a, *args, **kwargs)
+
+    np.asarray = counting_asarray
+    try:
+        yield counter
+    finally:
+        np.asarray = orig

@@ -6,22 +6,36 @@ executor consults this backend first; when an operator instance matches a
 kernel's contract it runs on the Pallas path, otherwise it falls through to
 the generic jnp implementation.  Enabled via ``SiriusEngine(use_kernels=True)``.
 
-Eligibility contracts:
-  * filter  — conjunction of closed/open range predicates over numeric/date
-              columns (Q1/Q6/Q19-style hot filters) → fused filter kernel.
-  * probe   — single-column integer PK-FK inner/semi/anti/mark join →
-              int32-factorized open-addressing probe kernel.
+Eligibility contracts (checked against device metadata — dtype/kind — plus
+device-side reductions; no column is ever copied to host to decide):
+  * filter    — conjunction of closed/open range predicates over numeric/date
+                columns (Q1/Q6/Q19-style hot filters) → fused filter kernel.
+  * probe     — single-column integer PK-FK inner/semi/anti/mark join →
+                int32-factorized open-addressing probe kernel.
+  * aggregate — group-by with int-factorizable keys (int/dictionary-code/
+                date/bool) and sum/count/avg/min/max aggregates → the MXU
+                one-hot-matmul kernel (``groupby_sum`` / ``groupby_sum_large``)
+                for the additive aggregates, device segment ops for min/max.
+
+Numerical note for the MXU path: the kernel accumulates in f32, so each
+additive column is centered by its f64 mean before the matmul (the
+accumulator carries deviations instead of magnitudes) and split into an
+f32 hi/lo pair whose f64 sum reproduces the centered value exactly
+(sum = kernel_sum(hi) + kernel_sum(lo) + c·count).  Together these keep
+the TPC-H money sums inside f64-oracle tolerance.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
-from ..relational.expressions import Between, BinOp, Col, Expr, Lit
-from ..relational.table import DATE, NUMERIC, Column, Table
+from ..relational.aggregate import AggSpec, factorize_groups
+from ..relational.expressions import Between, BinOp, Col, Expr, Lit, evaluate
+from ..relational.table import BOOL, DATE, NUMERIC, STRING, Column, Table
 
 
 def _collect_range_conjuncts(e: Expr, out: List[Tuple[str, float, float]]) -> bool:
@@ -60,6 +74,10 @@ def _collect_range_conjuncts(e: Expr, out: List[Tuple[str, float, float]]) -> bo
     return False
 
 
+_MXU_FNS = ("sum", "count", "count_star", "avg")
+_AGG_FNS = _MXU_FNS + ("min", "max")
+
+
 class KernelBackend:
     """Tracks usage so tests/benchmarks can assert the kernel path fired."""
 
@@ -67,6 +85,11 @@ class KernelBackend:
         self.interpret = interpret
         self.filter_hits = 0
         self.probe_hits = 0
+        self.agg_hits = 0
+
+    def hit_counts(self) -> dict:
+        return dict(filter=self.filter_hits, probe=self.probe_hits,
+                    agg=self.agg_hits)
 
     # -- fused range filter ---------------------------------------------------
     def try_filter(self, cond: Expr, t: Table) -> Optional[Table]:
@@ -80,16 +103,13 @@ class KernelBackend:
             c = t[name]
             if c.kind not in (NUMERIC, DATE):
                 return None
-            data = np.asarray(c.data)
-            if data.dtype.kind == "f":
-                # f32 lanes: only exact below 2^24 — money columns are fine at
-                # bench scale; bail out beyond to preserve exactness
-                if np.abs(data).max(initial=0.0) >= 2**24:
+            if t.num_rows:
+                # f32 lanes: only exact below 2^24 — device-side reduction,
+                # scalar sync only (never a column copy to host)
+                if float(jnp.max(jnp.abs(c.data))) >= 2**24:
                     return None
-            elif np.abs(data).max(initial=0) >= 2**24:
-                return None
-            cols.append(data.astype(np.float32))
-        mat = jnp.asarray(np.stack(cols, axis=1))
+            cols.append(c.data.astype(jnp.float32))
+        mat = jnp.stack(cols, axis=1)
         lo = jnp.asarray([c[1] for c in conjuncts], jnp.float32)
         hi = jnp.asarray([c[2] for c in conjuncts], jnp.float32)
         idx, count = kops.filter_select(mat, lo, hi, interpret=self.interpret)
@@ -104,32 +124,132 @@ class KernelBackend:
         pc, bc = probe[probe_keys[0]], build[build_keys[0]]
         if pc.kind != NUMERIC or bc.kind != NUMERIC:
             return None
-        bk = np.asarray(bc.data)
-        pk = np.asarray(pc.data)
+        bk, pk = bc.data, pc.data
         if bk.dtype.kind not in "iu" or pk.dtype.kind not in "iu":
             return None
-        if len(np.unique(bk)) != len(bk):   # kernel contract: unique build keys
+        if bk.shape[0] == 0 or pk.shape[0] == 0:
             return None
-        b32, p32 = kops.factorize_keys_int32(bk.astype(np.int64),
-                                             pk.astype(np.int64))
-        sk, sr, placed = kops.build_table32(jnp.asarray(b32))
+        bk = bk.astype(jnp.int64)
+        n = bk.shape[0]
+        # device-side build (jit-cached, bucketed shapes): the sorted ranks
+        # double as the int32 factorization and as the uniqueness check —
+        # the kernel contract (unique build keys) never copies a column
+        # to host to verify
+        nb = kops.bucket_size(n)
+        valid = jnp.arange(nb) < n
+        s, _, ranks, dup, sentinel_hit = kops.sorted_build(
+            kops.pad_rows(bk, nb), valid)
+        if bool(dup) or bool(sentinel_hit):
+            return None
+        b32 = jnp.where(valid, ranks, -1).astype(jnp.int32)
+        sk, sr, placed = kops.build_table32(b32, valid)
         if not bool(placed):
             return None
-        row, found = kops.hash_probe(jnp.asarray(p32), sk, sr,
-                                     interpret=self.interpret)
+        p32 = kops.map_probe_keys_jit(s, pk.astype(jnp.int64))
+        row, found = kops.hash_probe(p32, sk, sr, interpret=self.interpret)
         self.probe_hits += 1
-        found_np = np.asarray(found)
         if how == "mark":
-            return probe.with_column("__mark", Column(jnp.asarray(found_np), "bool"))
+            return probe.with_column("__mark", Column(found, BOOL))
         if how == "semi":
-            return probe.take(jnp.asarray(np.nonzero(found_np)[0]))
+            sel, k = kops.compact(found)
+            return probe.take(sel[: int(k)])
         if how == "anti":
-            return probe.take(jnp.asarray(np.nonzero(~found_np)[0]))
+            sel, k = kops.compact(~found)
+            return probe.take(sel[: int(k)])
         # inner: gather matched probe rows + matched build rows
-        sel = np.nonzero(found_np)[0]
-        out = {n: c.take(jnp.asarray(sel)) for n, c in probe.columns.items()}
-        bidx = np.asarray(row)[sel]
-        for n, c in build.columns.items():
-            if n not in out:
-                out[n] = c.take(jnp.asarray(bidx))
+        sel, k = kops.compact(found)
+        sel = sel[: int(k)]
+        out = {nm: c.take(sel) for nm, c in probe.columns.items()}
+        bidx = row[sel]
+        for nm, c in build.columns.items():
+            if nm not in out:
+                out[nm] = c.take(bidx)
+        return Table(out)
+
+    # -- MXU group-by aggregation ----------------------------------------------
+    def try_aggregate(self, t: Table, keys: Sequence[str],
+                      aggs: Sequence[AggSpec]) -> Optional[Table]:
+        """Route an eligible group-by to the one-hot-matmul Pallas kernel.
+
+        Additive aggregates (sum/count/avg) become columns of one (N, V)
+        value matrix summed per group in a single ``groupby_sum`` call —
+        low-cardinality group-bys, the GPU's atomic-contention worst case,
+        are the MXU's best case.  min/max ride along as device segment ops.
+        Returns None (caller falls back to the generic path) if any key or
+        aggregate is outside the contract; all checks are metadata-level.
+        """
+        if t.num_rows == 0:
+            return None
+        if t.num_rows >= 2**24:
+            # a group's f32 count is only exact below 2^24 rows (same
+            # exactness bound try_filter enforces); bail out past it
+            return None
+        for k in keys:
+            if k not in t or t[k].data.dtype.kind not in "iub":
+                return None       # int-factorizable keys only (codes/dates/ints)
+        if not aggs or any(a.fn not in _AGG_FNS for a in aggs):
+            return None
+
+        # evaluated aggregate inputs (device compute; dtype checks after)
+        values: List[Optional[Column]] = []
+        for a in aggs:
+            if a.fn == "count_star":
+                values.append(None)
+                continue
+            col = evaluate(a.expr, t)
+            if a.fn in _MXU_FNS and (col.kind == STRING
+                                     or col.data.dtype.kind not in "ifb"):
+                return None
+            values.append(col)
+
+        gids, uniq = factorize_groups(t, keys)
+        n_groups = uniq.num_rows if keys else 1
+
+        # (N, V) MXU value matrix: ones column (counts) + centered additive
+        # columns split into hi/lo f32 pairs (v - c == hi + lo exactly to
+        # ~2^-46 relative), so the f32 accumulator carries neither the
+        # magnitude (centering) nor the representation error (splitting).
+        # Centering constants stay on device (f64 scalars).
+        mxu_cols = [jnp.ones(t.num_rows, jnp.float32)]
+        routes = []                      # per agg: (hi column index, center)
+        for a, col in zip(aggs, values):
+            if a.fn in ("sum", "avg"):
+                data = col.data.astype(jnp.float64)
+                c = jnp.mean(data)
+                centered = data - c
+                hi = centered.astype(jnp.float32)
+                lo = (centered - hi.astype(jnp.float64)).astype(jnp.float32)
+                mxu_cols.extend([hi, lo])
+                routes.append((len(mxu_cols) - 2, c))
+            else:
+                routes.append((None, None))  # counts column or non-MXU agg
+
+        # group-count bucketing keeps the kernel's static arg stable across
+        # runs, so repeated queries reuse the compiled kernel
+        g_call = max(128, 1 << (n_groups - 1).bit_length())
+        acc = kops.groupby_sum_large(
+            gids.astype(jnp.int32), jnp.stack(mxu_cols, axis=1), g_call,
+            interpret=self.interpret)[:n_groups]
+        counts = acc[:, 0].astype(jnp.float64)
+
+        out = dict(uniq.columns)
+        for a, col, (slot, center) in zip(aggs, values, routes):
+            if a.fn in ("count", "count_star"):
+                out[a.name] = Column(jnp.rint(counts).astype(jnp.int64), NUMERIC)
+            elif a.fn in ("sum", "avg"):
+                s = (acc[:, slot].astype(jnp.float64)
+                     + acc[:, slot + 1].astype(jnp.float64)
+                     + center * counts)
+                if a.fn == "avg":
+                    out[a.name] = Column(s / jnp.maximum(counts, 1.0), NUMERIC)
+                elif col.data.dtype.kind in "ib":
+                    out[a.name] = Column(jnp.rint(s).astype(jnp.int64), NUMERIC)
+                else:
+                    out[a.name] = Column(s, NUMERIC)
+            else:                        # min / max: device segment ops
+                seg = jax.ops.segment_min if a.fn == "min" else jax.ops.segment_max
+                res = seg(col.data, gids, n_groups)
+                out[a.name] = Column(res, col.kind,
+                                     col.dictionary if col.kind == STRING else None)
+        self.agg_hits += 1
         return Table(out)

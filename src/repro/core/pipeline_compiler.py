@@ -1,0 +1,395 @@
+"""Pipeline compiler: fuse contiguous op chains into one jitted device region.
+
+The eager executor dispatches each operator separately and (pre-refactor)
+forced a host sync between them.  Per the data-path-fusion line of work
+(PAPERS.md), the single largest win for this architecture is compiling each
+pipeline's contiguous Filter/Project/Probe chain into **one** XLA program:
+columns enter the region once, every intermediate lives in device registers /
+HBM, and the only host interaction is the scalar row count of the final
+compaction.
+
+Mechanics:
+
+* **Mask-mode execution.**  Inside the fused region tables keep a static row
+  count; filters and probes narrow a validity mask instead of compacting.
+  One ``kernels.ops.compact`` + gather at the region boundary materializes
+  the survivors (the TPU answer to warp-ballot compaction).
+* **Signature-keyed cache.**  Compiled regions are cached across queries,
+  keyed by the *plan signature*: the structural expression tree of every op
+  plus the input column names/kinds/dtypes (and dictionary identity for
+  string columns, whose host-side dictionaries fold into the trace as
+  constants).  Shapes are deliberately absent from the signature — jax.jit
+  keys them — but inputs are padded to power-of-two **padding buckets** so
+  repeated runs and near-miss cardinalities reuse the same compilation.
+* **Probe lowering.**  An eligible hash probe (single int key; unique build
+  keys for inner; inner/semi/anti/mark) becomes a static-shape lookup inside
+  the fused region: the lookup table is built once per pipeline on device
+  and passed in as arguments.  Dense key domains get a sort-free
+  direct-address build (``kernels.ops.direct_build``), sparse domains a
+  sorted binary-search build, and with a kernel backend attached the probe
+  runs the Pallas ``hash_probe`` kernel on int32-factorized keys.
+* **Graceful degradation.**  Any op outside the fusion contract (left joins,
+  multi-column keys, duplicate build keys…) splits the chain; the op runs
+  eagerly between fused segments.  A chain whose trace fails is marked and
+  executed eagerly forever after — never an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from ..relational.expressions import Expr, evaluate
+from ..relational.table import BOOL, DATE, NUMERIC, Column, Table
+
+_bucket = kops.bucket_size
+_pad = kops.pad_rows
+
+
+def expr_signature(e) -> str:
+    """Deterministic structural rendering of an expression tree.
+
+    Part of the plan signature that keys the compiled-region cache (the safe
+    idiom here is structural — Expr.__eq__ builds BinOp nodes, see
+    ``Expr.equals``)."""
+    if e is None:
+        return "_"
+    if isinstance(e, Expr) and dataclasses.is_dataclass(e):
+        parts = []
+        for f in dataclasses.fields(e):
+            v = getattr(e, f.name)
+            if isinstance(v, Expr):
+                parts.append(expr_signature(v))
+            elif isinstance(v, (list, tuple)):
+                parts.append("[" + ",".join(
+                    expr_signature(x) if isinstance(x, Expr) else
+                    ("(" + ",".join(expr_signature(y) if isinstance(y, Expr)
+                                    else repr(y) for y in x) + ")")
+                    if isinstance(x, tuple) else repr(x) for x in v) + "]")
+            else:
+                parts.append(repr(v))
+        return f"{type(e).__name__}({','.join(parts)})"
+    return repr(e)
+
+
+def _table_signature(t: Table) -> Tuple:
+    return tuple((n, c.kind, str(c.data.dtype),
+                  id(c.dictionary) if c.dictionary is not None else None)
+                 for n, c in t.columns.items())
+
+
+# ---------------------------------------------------------------------------
+# fused items (static descriptions of ops inside a region)
+# ---------------------------------------------------------------------------
+
+
+class _FusedFilter:
+    def __init__(self, cond: Expr):
+        self.cond = cond
+
+    def signature(self):
+        return ("F", expr_signature(self.cond))
+
+    def apply(self, t: Table, valid, aux):
+        return t, valid & evaluate(self.cond, t).data
+
+
+class _FusedProject:
+    def __init__(self, exprs, keep_input: bool):
+        self.exprs = exprs
+        self.keep_input = keep_input
+
+    def signature(self):
+        return ("P", tuple((n, expr_signature(e)) for n, e in self.exprs),
+                self.keep_input)
+
+    def apply(self, t: Table, valid, aux):
+        cols = dict(t.columns) if self.keep_input else {}
+        for name, e in self.exprs:
+            cols[name] = evaluate(e, t)
+        return Table(cols), valid
+
+
+class _FusedSelect:
+    def __init__(self, columns):
+        self.columns = list(columns)
+
+    def signature(self):
+        return ("S", tuple(self.columns))
+
+    def apply(self, t: Table, valid, aux):
+        return t.select([c for c in self.columns if c in t]), valid
+
+
+class _FusedProbe:
+    """Static-shape hash probe; the build table arrives as region arguments.
+
+    ``aux`` = (sorted keys, lookup table, build_arrays) — all padded to
+    power-of-two buckets at prepare time.  ``lookup table`` is the
+    sorted-order row map (pure-XLA binary-search probe) or the Pallas
+    kernel's (slots_key, slots_row) when a kernel backend is attached.
+    """
+
+    def __init__(self, probe_key: str, how: str, mark_name: str,
+                 post_filter: Optional[Expr], build_meta, mode: str,
+                 interpret: bool = True):
+        self.probe_key = probe_key
+        self.how = how
+        self.mark_name = mark_name
+        self.post_filter = post_filter
+        self.build_meta = build_meta      # tuple of (name, kind, dtype, dict)
+        self.mode = mode                  # direct | sorted | kernel
+        self.interpret = interpret        # kernel mode only; traced in
+
+    def signature(self):
+        return ("J", self.probe_key, self.how, self.mark_name,
+                expr_signature(self.post_filter),
+                tuple((n, k, str(dt), id(d) if d is not None else None)
+                      for n, k, dt, d in self.build_meta),
+                self.mode, self.interpret)
+
+    def apply(self, t: Table, valid, aux):
+        table, build_arrays = aux
+        probe_col = t[self.probe_key]
+        if probe_col.data.dtype.kind not in "iu":
+            # int64 cast of a float/string key would change semantics: abort
+            # the trace; the segment degrades to the eager ops (correct path)
+            raise TypeError(f"unfusable probe key dtype {probe_col.data.dtype}")
+        pk = probe_col.data.astype(jnp.int64)
+        if self.mode == "kernel":
+            s_keys, slots_key, slots_row = table
+            p32 = kops.map_probe_keys(s_keys, pk)
+            row, found = kops.hash_probe(p32, slots_key, slots_row,
+                                         interpret=self.interpret)
+        elif self.mode == "direct":
+            slot, lo = table
+            row, found = kops.direct_lookup(slot, lo, pk)
+        else:
+            s_keys, order = table
+            row, found = kops.sorted_lookup(s_keys, order, pk)
+        if self.how == "mark":
+            out = t.with_column(self.mark_name, Column(found, BOOL))
+        elif self.how == "semi":
+            out, valid = t, valid & found
+        elif self.how == "anti":
+            out, valid = t, valid & ~found
+        else:  # inner
+            cols = dict(t.columns)
+            # clip bound comes from the traced build-array shape, never a
+            # python constant: a cached region replayed with a fresh (same
+            # bucket) build table must not clamp to the old row count
+            safe = jnp.clip(row, 0, build_arrays[0].shape[0] - 1)
+            for (name, kind, dt, dct), arr in zip(self.build_meta,
+                                                  build_arrays):
+                if name not in cols:
+                    cols[name] = Column(
+                        jnp.take(arr, safe),  # padded tail never referenced
+                        kind, dct)
+            out, valid = Table(cols), valid & found
+        if self.post_filter is not None:
+            valid = valid & evaluate(self.post_filter, out).data
+        return out, valid
+
+    def _dicts(self):
+        return [(n, d) for n, k, dt, d in self.build_meta]
+
+
+# ---------------------------------------------------------------------------
+# compiled region (cached across queries by signature)
+# ---------------------------------------------------------------------------
+
+
+class _CompiledRegion:
+    def __init__(self, compiler: "PipelineCompiler", items, in_meta):
+        self.compiler = compiler
+        self.items = items
+        self.in_meta = in_meta            # tuple of (name, kind, dictionary)
+        self.out_meta = None              # recorded at trace time
+        self.failed = False
+        self.dict_refs: List = []         # pins dictionary ids for the cache key
+        self.jitted = jax.jit(self._run)
+
+    def _run(self, arrays, valid, aux):
+        # runs at trace time only; execution replays the compiled XLA program
+        self.compiler.stats["traces"] += 1
+        t = Table({name: Column(arr, kind, dct)
+                   for (name, kind, dct), arr in zip(self.in_meta, arrays)})
+        ai = 0
+        for item in self.items:
+            a = None
+            if isinstance(item, _FusedProbe):
+                a = aux[ai]
+                ai += 1
+            t, valid = item.apply(t, valid, a)
+        self.out_meta = tuple((n, c.kind, c.dictionary)
+                              for n, c in t.columns.items())
+        # compaction happens inside the compiled region (cumsum-scatter +
+        # gather); only the surviving-row count crosses to host
+        idx = jnp.nonzero(valid, size=valid.shape[0], fill_value=0)[0]
+        return (tuple(jnp.take(c.data, idx, axis=0)
+                      for c in t.columns.values()), valid.sum())
+
+
+class FusedSegment:
+    """A per-execution runnable: pads → compiled region → one compaction."""
+
+    def __init__(self, compiler: "PipelineCompiler", items, eager_ops, aux):
+        self.compiler = compiler
+        self.items = items
+        self.eager_ops = eager_ops        # fallback path (same semantics)
+        self.aux = tuple(aux)
+
+    def _eager(self, t: Table) -> Table:
+        for op in self.eager_ops:
+            t = op(t)
+        return t
+
+    def __call__(self, t: Table) -> Table:
+        sig = (tuple(i.signature() for i in self.items), _table_signature(t))
+        region = self.compiler.cache.get(sig)
+        if region is None:
+            in_meta = tuple((n, c.kind, c.dictionary)
+                            for n, c in t.columns.items())
+            region = _CompiledRegion(self.compiler, self.items, in_meta)
+            # pin every dictionary object participating in the signature so
+            # its id() can never be recycled onto a different dictionary
+            region.dict_refs = [c.dictionary for c in t.columns.values()] + [
+                d for item in self.items if isinstance(item, _FusedProbe)
+                for _, d in item._dicts()]
+            self.compiler.cache[sig] = region
+        else:
+            self.compiler.stats["cache_hits"] += 1
+        if region.failed:
+            return self._eager(t)
+
+        n = t.num_rows
+        b = _bucket(n)
+        arrays = tuple(_pad(c.data, b) for c in t.columns.values())
+        valid = jnp.arange(b) < n
+        try:
+            out_arrays, count = region.jitted(arrays, valid, self.aux)
+        except Exception:  # noqa: BLE001 — degrade, never fail the query
+            region.failed = True
+            return self._eager(t)
+        self.compiler.stats["region_calls"] += 1
+        k = int(count)                     # the region's single scalar sync
+        return Table({
+            name: Column(arr[:k], kind, dct)
+            for (name, kind, dct), arr in zip(region.out_meta, out_arrays)})
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+
+
+class PipelineCompiler:
+    """Owns the signature-keyed cache of compiled pipeline regions."""
+
+    def __init__(self):
+        self.cache: Dict[Tuple, _CompiledRegion] = {}
+        self.stats = {"traces": 0, "cache_hits": 0, "region_calls": 0,
+                      "fused_probes": 0, "eager_ops": 0}
+
+    # -- probe eligibility + device-side build ------------------------------
+    def _lower_probe(self, op, backend) -> Optional[_FusedProbe]:
+        rel = op.rel
+        if rel.how not in ("inner", "semi", "anti", "mark"):
+            return None
+        if len(rel.probe_keys) != 1 or len(rel.build_keys) != 1:
+            return None
+        build = op.build_ref.table
+        if build is None or build.num_rows == 0:
+            return None
+        bc = build[rel.build_keys[0]]
+        if bc.kind not in (NUMERIC, DATE) or bc.data.dtype.kind not in "iu":
+            return None
+        bk = bc.data.astype(jnp.int64)
+        n = build.num_rows
+        nb = _bucket(n)
+        valid = jnp.arange(nb) < n
+        bk_p = _pad(bk, nb)
+
+        if backend is not None:
+            # Pallas kernel path: the sorted ranks double as the int32
+            # factorization the probe kernel wants
+            s, order, ranks, dup, sentinel_hit = kops.sorted_build(bk_p, valid)
+            if bool(sentinel_hit) or (rel.how == "inner" and bool(dup)):
+                return None
+            b32 = jnp.where(valid, ranks, -1).astype(jnp.int32)
+            sk, sr, placed = kops.build_table32(b32, valid)
+            if not bool(placed):
+                return None
+            mode, table = "kernel", (s, sk, sr)
+            backend.probe_hits += 1
+        else:
+            lo, hi, _ = kops.key_bounds(bk_p, valid)
+            lo_i, hi_i = int(lo), int(hi)       # one sync for build metadata
+            domain = _bucket(hi_i - lo_i + 1)
+            if domain <= max(1 << 16, 8 * nb):
+                # dense key domain: sort-free direct-address build
+                slot, dup = kops.direct_build(bk_p, valid, lo, domain)
+                if rel.how == "inner" and bool(dup):
+                    return None           # multi-match: eager join handles it
+                mode, table = "direct", (slot, lo)
+            else:
+                # sparse keys: sorted binary-search build
+                s, order, ranks, dup, sentinel_hit = kops.sorted_build(
+                    bk_p, valid)
+                if bool(sentinel_hit) or (rel.how == "inner" and bool(dup)):
+                    return None
+                mode, table = "sorted", (s, order)
+        build_meta = tuple((nm, c.kind, str(c.data.dtype), c.dictionary)
+                           for nm, c in build.columns.items())
+        build_arrays = tuple(_pad(c.data, nb)
+                             for c in build.columns.values())
+        fused = _FusedProbe(rel.probe_keys[0], rel.how, rel.mark_name,
+                            rel.post_filter, build_meta, mode,
+                            backend.interpret if backend is not None else True)
+        fused._aux = (table, build_arrays)
+        self.stats["fused_probes"] += 1
+        return fused
+
+    def prepare(self, ops: Sequence, backend=None) -> List:
+        """Segment a pipeline's op chain into fused regions + eager ops.
+
+        Called once per pipeline execution, after dependencies (build
+        tables) have materialized; returns a list of callables Table→Table.
+        """
+        from .executor import FilterOp, ProbeOp, ProjectOp, SelectOp
+
+        segments: List = []
+        run_items: List = []
+        run_ops: List = []
+        run_aux: List = []
+
+        def flush():
+            if run_items:
+                segments.append(FusedSegment(self, list(run_items),
+                                             list(run_ops), list(run_aux)))
+                run_items.clear(), run_ops.clear(), run_aux.clear()
+
+        for op in ops:
+            lowered = None
+            if isinstance(op, FilterOp):
+                lowered = _FusedFilter(op.cond)
+            elif isinstance(op, SelectOp):
+                lowered = _FusedSelect(op.columns)
+            elif isinstance(op, ProjectOp):
+                lowered = _FusedProject(op.exprs, op.keep_input)
+            elif isinstance(op, ProbeOp):
+                lowered = self._lower_probe(op, backend)
+                if lowered is not None:
+                    run_aux.append(lowered._aux)
+            if lowered is None:
+                flush()
+                segments.append(op)
+                self.stats["eager_ops"] += 1
+            else:
+                run_items.append(lowered)
+                run_ops.append(op)
+        flush()
+        return segments

@@ -33,13 +33,16 @@ def _hash(keys: jnp.ndarray, mask: int) -> jnp.ndarray:
     return h & mask
 
 
-def build_table32(keys32: jnp.ndarray, capacity: int | None = None,
-                  max_probes: int = 32):
+@functools.partial(jax.jit, static_argnames=("capacity", "max_probes"))
+def build_table32(keys32: jnp.ndarray, valid: jnp.ndarray | None = None,
+                  capacity: int | None = None, max_probes: int = 32):
     """Build the open-addressing table the kernel probes (32-bit hash).
 
     Same deterministic multi-round masked-scatter as
     relational.join.StaticHashTable.build but over the kernel's hash
-    function, so build and probe walk identical chains.
+    function, so build and probe walk identical chains.  ``valid`` masks
+    padding rows (they never place), so callers can bucket input shapes and
+    reuse this jit-compiled build across executions.
     Returns (slots_key int32, slots_row int32, all_placed bool).
     """
     n = keys32.shape[0]
@@ -61,7 +64,7 @@ def build_table32(keys32: jnp.ndarray, capacity: int | None = None,
         return slots_row, placed
 
     slots_row = jnp.full((cap,), -1, jnp.int32)
-    placed = jnp.zeros((n,), bool)
+    placed = (jnp.zeros((n,), bool) if valid is None else ~valid)
     slots_row, placed = jax.lax.fori_loop(0, max_probes, round_body,
                                           (slots_row, placed))
     slots_key = jnp.where(slots_row >= 0,

@@ -14,6 +14,8 @@ The wrappers own the TPU-adaptation glue documented in DESIGN.md:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,24 +26,126 @@ from .groupby_agg import groupby_sum
 from .hash_probe import build_table32, hash_probe
 
 __all__ = [
-    "build_table32", "compact", "decode_attention", "factorize_keys_int32",
-    "filter_mask_counts", "filter_select", "groupby_sum", "groupby_sum_large",
-    "hash_probe", "hash_probe_int64",
+    "bucket_size", "build_table32", "compact", "decode_attention",
+    "direct_build", "direct_lookup", "factorize_keys_int32",
+    "factorize_keys_int32_device", "filter_mask_counts", "filter_select",
+    "groupby_sum", "groupby_sum_large", "hash_probe", "hash_probe_int64",
+    "key_bounds", "map_probe_keys", "pad_rows", "sorted_build",
+    "sorted_lookup",
 ]
 
 _GROUP_BUDGET = 4096  # VMEM accumulator rows per kernel call
+KEY_SENTINEL = jnp.iinfo(jnp.int64).max  # pads sorted key arrays
 
 
+def bucket_size(n: int, minimum: int = 8) -> int:
+    """Pad row counts to powers of two so jit shape keys are reused."""
+    if n <= minimum:
+        return minimum
+    return 1 << int(n - 1).bit_length()
+
+
+def pad_rows(arr: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Zero-pad the leading axis to ``b`` rows (device-side)."""
+    n = arr.shape[0]
+    if n == b:
+        return arr
+    return jnp.concatenate([arr, jnp.zeros((b - n,) + arr.shape[1:],
+                                           arr.dtype)])
+
+
+@jax.jit
+def sorted_build(keys_padded: jnp.ndarray, valid: jnp.ndarray):
+    """Sort-based join build over sentinel-padded int64 keys (jit-cached).
+
+    → (sorted keys with KEY_SENTINEL tail, original-row order int32,
+       rank per input row int32, duplicate-key flag, sentinel-collision
+    flag).  The sorted array doubles as the dense factorization (rank ==
+    position), so probe keys map through ``map_probe_keys`` /
+    ``sorted_lookup`` with no extra pass.  Both flags come back as device
+    scalars so the caller pays a single sync for all build metadata.
+    """
+    nb = keys_padded.shape[0]
+    masked = jnp.where(valid, keys_padded, KEY_SENTINEL)
+    order = jnp.argsort(masked)              # valid keys first, pads last
+    s = masked[order]
+    if nb > 1:
+        dup = jnp.any((s[1:] == s[:-1]) & (s[1:] != KEY_SENTINEL))
+    else:
+        dup = jnp.zeros((), bool)
+    sentinel_hit = jnp.any(valid & (keys_padded == KEY_SENTINEL))
+    ranks = jnp.zeros((nb,), jnp.int32).at[order].set(
+        jnp.arange(nb, dtype=jnp.int32))
+    return s, order.astype(jnp.int32), ranks, dup, sentinel_hit
+
+
+@jax.jit
+def key_bounds(keys_padded: jnp.ndarray, valid: jnp.ndarray):
+    """(min, max, count) over the valid rows of a padded key column."""
+    masked_lo = jnp.where(valid, keys_padded, KEY_SENTINEL)
+    masked_hi = jnp.where(valid, keys_padded, jnp.iinfo(jnp.int64).min)
+    return masked_lo.min(), masked_hi.max(), valid.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("domain",))
+def direct_build(keys_padded: jnp.ndarray, valid: jnp.ndarray,
+                 lo, domain: int):
+    """Sort-free direct-address join build for dense key domains.
+
+    TPC-H build keys (PKs, FK ranges) are dense, so the hash table
+    degenerates to a perfect direct-address array: scatter each row id into
+    ``slot[key - lo]``.  One scatter instead of a sort — XLA's generic sort
+    is the slowest primitive on every backend.  → (slot array int32 [-1 =
+    empty], duplicate-key flag).  Padding rows scatter into an overflow
+    slot that is cut off.
+    """
+    nb = keys_padded.shape[0]
+    idx = jnp.clip(keys_padded - lo, 0, domain - 1)
+    pos = jnp.where(valid, idx, domain)          # pads → overflow slot
+    slot = jnp.full((domain + 1,), -1, jnp.int32).at[pos].max(
+        jnp.arange(nb, dtype=jnp.int32))
+    counts = jnp.zeros((domain + 1,), jnp.int32).at[pos].add(1)
+    dup = jnp.any(counts[:domain] > 1)
+    return slot[:domain], dup
+
+
+def direct_lookup(slot: jnp.ndarray, lo, probe_keys: jnp.ndarray):
+    """Probe a direct-address build → (build row [-1], found). jit-safe."""
+    domain = slot.shape[0]
+    idx = probe_keys - lo
+    ok = (idx >= 0) & (idx < domain)
+    row = jnp.take(slot, jnp.clip(idx, 0, domain - 1))
+    found = ok & (row >= 0)
+    return jnp.where(found, row, -1), found
+
+
+def sorted_lookup(s_keys: jnp.ndarray, s_order: jnp.ndarray,
+                  probe_keys: jnp.ndarray):
+    """Probe sentinel-padded sorted build keys → (build row [-1], found).
+
+    Plain jnp (binary search + two gathers) so it inlines into fused
+    pipeline regions; first match wins (exact for unique keys, existence
+    semantics for semi/anti/mark).
+    """
+    pos = jnp.clip(jnp.searchsorted(s_keys, probe_keys), 0,
+                   s_keys.shape[0] - 1)
+    k = jnp.take(s_keys, pos)
+    found = (k == probe_keys) & (k != KEY_SENTINEL)
+    row = jnp.take(s_order, pos)
+    return jnp.where(found, row, -1), found
+
+
+@jax.jit
 def compact(mask: jnp.ndarray):
     """Selection-vector compaction: indices of True, selected-first order.
 
     Static output size (= len(mask)); count tells how many lead entries are
-    valid.  Stable argsort of ~mask — pure XLA, fuses with the gather that
-    consumes it.
+    valid.  Cumsum-scatter (``nonzero`` with a static size) — pure XLA,
+    jit-compiled so repeated shapes replay a cached program, and it fuses
+    with the gather that consumes it.
     """
-    order = jnp.argsort(~mask, stable=True)
-    count = mask.sum()
-    return order, count
+    idx = jnp.nonzero(mask, size=mask.shape[0], fill_value=0)[0]
+    return idx, mask.sum()
 
 
 def filter_select(cols: jnp.ndarray, lo, hi, interpret: bool = True):
@@ -89,3 +193,33 @@ def factorize_keys_int32(build_keys_np: np.ndarray, probe_keys_np: np.ndarray):
     hit = uni[pos] == probe_keys_np
     p = np.where(hit, pos, -2).astype(np.int32)  # -2 never matches
     return b, p
+
+
+def factorize_keys_int32_device(build_keys: jnp.ndarray,
+                                probe_keys: jnp.ndarray):
+    """Device-side analogue of ``factorize_keys_int32`` — no host roundtrip.
+
+    Build keys are ranked against their sorted unique set; probe keys map
+    through the same ranking (-2 = key absent, never matches).  Also usable
+    under jit when ``probe_keys`` is a tracer and ``build_keys``/``uni`` are
+    concrete-shape arguments (``map_probe_keys``)."""
+    uni = jnp.unique(build_keys)
+    b = jnp.searchsorted(uni, build_keys).astype(jnp.int32)
+    p = map_probe_keys(uni, probe_keys)
+    return b, p, uni
+
+
+def map_probe_keys(uni: jnp.ndarray, probe_keys: jnp.ndarray) -> jnp.ndarray:
+    """Rank ``probe_keys`` in the sorted-unique build key set (jit-safe).
+
+    ``uni`` may carry a KEY_SENTINEL pad tail; sentinel positions never
+    match real keys so padded ranks map to -2 (absent).
+    """
+    pos = jnp.clip(jnp.searchsorted(uni, probe_keys), 0,
+                   max(uni.shape[0] - 1, 0))
+    hit = jnp.take(uni, pos) == probe_keys if uni.shape[0] else \
+        jnp.zeros(probe_keys.shape, bool)
+    return jnp.where(hit, pos, -2).astype(jnp.int32)
+
+
+map_probe_keys_jit = jax.jit(map_probe_keys)

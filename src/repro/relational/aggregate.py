@@ -1,10 +1,11 @@
 """Group-by aggregation.
 
-Eager path: factorize group keys host-side (exact, any cardinality), then
-device segment reductions — the hash-aggregate analogue.  The paper notes
-libcudf falls back to *sort-based* group-by for string keys; our dictionary
-codes keep strings on the hash path, which is one of the TPU-adaptation wins
-recorded in DESIGN.md.
+Eager path: factorize group keys on device (lexsort-based, exact for any
+cardinality), then device segment reductions — the hash-aggregate analogue.
+The paper notes libcudf falls back to *sort-based* group-by for string keys;
+our dictionary codes keep strings on the hash path, which is one of the
+TPU-adaptation wins recorded in DESIGN.md.  No column ever round-trips to
+host; the only sync is the scalar group count.
 
 Static path: fixed ``num_groups`` scatter-add aggregation (jit / shard_map /
 kernel oracle) — group ids must already be dense small ints.
@@ -12,6 +13,7 @@ kernel oracle) — group ids must already be dense small ints.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -31,27 +33,109 @@ class AggSpec:
     name: str
 
 
-def factorize_groups(table: Table, keys: Sequence[str]) -> Tuple[np.ndarray, Table]:
-    """→ (group_id per row, unique-key Table in group-id order)."""
+@jax.jit
+def _factorize_core(arrs: Tuple[jnp.ndarray, ...]):
+    """Lexsort-based exact factorization (compiled; cached per shape/arity)."""
+    n = arrs[0].shape[0]
+    order = jnp.lexsort(tuple(reversed(arrs)))
+    changed = jnp.zeros(n, bool).at[0].set(True)
+    for a in arrs:
+        s = a[order]
+        changed = changed.at[1:].set(changed[1:] | (s[1:] != s[:-1]))
+    gid_sorted = jnp.cumsum(changed) - 1
+    gids = jnp.zeros(n, jnp.int64).at[order].set(gid_sorted)
+    # first row of each group in gid order; tail beyond the group count is
+    # garbage and sliced off by the caller
+    rep = order[jnp.nonzero(changed, size=n, fill_value=0)[0]]
+    return gids, rep, changed.sum()
+
+
+# dense-domain factorization: count over the key product space instead of
+# sorting — the hash-aggregate analogue of libcudf's direct path.  XLA's
+# generic sort is the slow op on every backend, so small-domain group-bys
+# (flags, dictionary codes, dates, FK ranges) skip it entirely.  The domain
+# is capped relative to the row count: the accumulator arrays are
+# domain-sized, so a domain far beyond n costs more than the sort it avoids.
+_DENSE_DOMAIN_LIMIT = 1 << 21
+
+
+@jax.jit
+def _key_bounds(arrs: Tuple[jnp.ndarray, ...]):
+    return tuple((a.min(), a.max()) for a in arrs)
+
+
+@functools.partial(jax.jit, static_argnames=("domain",))
+def _dense_factorize(packed: jnp.ndarray, domain: int):
+    n = packed.shape[0]
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), packed, domain)
+    present = counts > 0
+    mapping = jnp.cumsum(present.astype(jnp.int64)) - 1
+    gids = mapping[packed]
+    first = jax.ops.segment_min(jnp.arange(n), packed, domain)
+    # representative row per present packed value, ascending (= lex) order
+    rep = first[jnp.nonzero(present, size=domain, fill_value=0)[0]]
+    return gids, rep, present.sum()
+
+
+def _group_key_arrays(table: Table, keys: Sequence[str]):
+    arrs = [jnp.asarray(table[k].data) for k in keys]
+    return [a.astype(jnp.int64) if a.dtype.kind != "f" else a for a in arrs]
+
+
+def _dense_pack(arrs, n: int):
+    """Pack int key columns into one dense id → (packed, domain) or None.
+
+    One device sync (the fused bounds reduce) decides eligibility."""
+    if not all(a.dtype.kind != "f" for a in arrs):
+        return None
+    limit = min(_DENSE_DOMAIN_LIMIT, max(1024, 4 * n))
+    bounds = _key_bounds(tuple(arrs))
+    los = [int(b[0]) for b in bounds]
+    cards = [int(b[1]) - lo + 1 for b, lo in zip(bounds, los)]
+    domain = 1
+    for card in cards:
+        domain *= card
+        if domain > limit:
+            return None
+    packed = arrs[0] - los[0]
+    for a, lo, card in zip(arrs[1:], los[1:], cards[1:]):
+        packed = packed * card + (a - lo)
+    return packed, domain
+
+
+def factorize_groups(table: Table, keys: Sequence[str]) -> Tuple[jnp.ndarray, Table]:
+    """→ (group_id per row on device, unique-key Table in group-id order)."""
+    n = table.num_rows
     if not keys:
-        return np.zeros(table.num_rows, np.int64), Table({})
-    cols = [table[k] for k in keys]
-    mats = [np.asarray(c.data) for c in cols]
-    stacked = np.stack([m.astype(np.int64) if m.dtype.kind != "f" else m for m in mats])
-    # lexsort-based exact factorization over arbitrary column count
-    order = np.lexsort(stacked[::-1])
-    sorted_cols = stacked[:, order]
-    changed = np.zeros(sorted_cols.shape[1], bool)
-    if sorted_cols.shape[1]:
-        changed[0] = True
-        for row in sorted_cols:
-            changed[1:] |= row[1:] != row[:-1]
-    gid_sorted = np.cumsum(changed) - 1
-    gids = np.empty(table.num_rows, np.int64)
-    gids[order] = gid_sorted
-    rep_idx = order[changed]  # first row of each group, in group-id order
-    uniq = Table({k: table[k].take(jnp.asarray(rep_idx)) for k in keys})
+        return jnp.zeros(n, jnp.int64), Table({})
+    if n == 0:
+        return jnp.zeros(0, jnp.int64), Table(
+            {k: table[k].take(jnp.zeros((0,), jnp.int64)) for k in keys})
+    arrs = _group_key_arrays(table, keys)
+
+    dense = _dense_pack(arrs, n)
+    if dense is not None:
+        gids, rep, n_groups = _dense_factorize(*dense)
+        rep_idx = rep[: int(n_groups)]
+        uniq = Table({k: table[k].take(rep_idx) for k in keys})
+        return gids, uniq
+
+    gids, rep, n_groups = _factorize_core(tuple(arrs))
+    rep_idx = rep[: int(n_groups)]          # the factorization's scalar sync
+    uniq = Table({k: table[k].take(rep_idx) for k in keys})
     return gids, uniq
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups",))
+def _count_distinct(gids: jnp.ndarray, vals: jnp.ndarray, n_groups: int):
+    """Device-side: sort (gid, value) pairs, count run starts per group."""
+    n = gids.shape[0]
+    order = jnp.lexsort((vals, gids))
+    g_s, v_s = gids[order], vals[order]
+    first = jnp.ones(n, bool)
+    if n > 1:
+        first = first.at[1:].set((g_s[1:] != g_s[:-1]) | (v_s[1:] != v_s[:-1]))
+    return jax.ops.segment_sum(first.astype(jnp.int64), g_s, n_groups)
 
 
 def _segment(fn: str, data: jnp.ndarray, gids: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -64,56 +148,132 @@ def _segment(fn: str, data: jnp.ndarray, gids: jnp.ndarray, n: int) -> jnp.ndarr
     raise ValueError(fn)
 
 
+@functools.partial(jax.jit, static_argnames=("fns", "domain"))
+def _dense_aggregate_core(packed, datas, fns: Tuple[str, ...], domain: int):
+    """Factorization *and* every segment reduction in one compiled program.
+
+    Reductions run straight over the packed dense key domain; present
+    groups are compacted at the end, so the whole group-by costs a single
+    host sync (the group count).  → (counts, outs, rep rows, n_groups),
+    all domain-sized with the live groups ascending (= lexicographic) in
+    the leading entries.
+    """
+    n = packed.shape[0]
+    counts = jax.ops.segment_sum(jnp.ones((n,)), packed, domain)
+    present = counts > 0
+    sel = jnp.nonzero(present, size=domain, fill_value=0)[0]
+    outs = []
+    for fn, data in zip(fns, datas):
+        if fn == "avg":
+            s = jax.ops.segment_sum(data.astype(jnp.float64), packed, domain)
+            res = s / jnp.maximum(counts, 1.0)
+        else:
+            res = _segment(fn, data, packed, domain)
+        outs.append(res[sel])
+    first = jax.ops.segment_min(jnp.arange(n), packed, domain)
+    return counts[sel], tuple(outs), first[sel], present.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("fns", "n_groups"))
+def _aggregate_core(gids, datas, fns: Tuple[str, ...], n_groups: int):
+    """All segment reductions of one group-by in a single compiled program.
+
+    ``datas`` are pre-cast value arrays (ones for counts); ``fns`` are the
+    core reductions (sum/min/max/avg).  Cached per (fns, n_groups, shapes).
+    """
+    counts = jax.ops.segment_sum(jnp.ones(gids.shape[0]), gids, n_groups)
+    outs = []
+    for fn, data in zip(fns, datas):
+        if fn == "avg":
+            s = jax.ops.segment_sum(data.astype(jnp.float64), gids, n_groups)
+            outs.append(s / jnp.maximum(counts, 1.0))
+        else:
+            outs.append(_segment(fn, data, gids, n_groups))
+    return counts, tuple(outs)
+
+
 def group_aggregate(
     table: Table, keys: Sequence[str], aggs: Sequence[AggSpec]
 ) -> Table:
-    """Eager hash aggregate."""
-    gids_np, uniq = factorize_groups(table, keys)
-    n_groups = int(gids_np.max()) + 1 if len(gids_np) else 0
-    if table.num_rows == 0:
-        # empty input: global aggregates still produce one row
-        if keys:
-            return Table({**uniq.columns, **{a.name: Column(jnp.zeros((0,))) for a in aggs}})
-        n_groups = 1
-        gids_np = np.zeros(0, np.int64)
-    if not keys:
-        n_groups = max(n_groups, 1)
-    gids = jnp.asarray(gids_np)
+    """Eager hash aggregate (fully device-resident)."""
+    n = table.num_rows
+    if n == 0 and keys:
+        # empty input with keys: zero groups
+        empty = jnp.zeros((0,), jnp.int64)
+        return Table({**{k: table[k].take(empty) for k in keys},
+                      **{a.name: Column(jnp.zeros((0,))) for a in aggs}})
 
-    out: Dict[str, Column] = dict(uniq.columns)
-    counts = jax.ops.segment_sum(jnp.ones(table.num_rows), gids, n_groups)
+    # eager prep: evaluate value expressions and normalize dtypes, then run
+    # every segment reduction in one compiled program
+    ones = jnp.ones(n, jnp.int64)
+    fns: List[str] = []
+    datas: List[jnp.ndarray] = []
+    meta: List[Optional[Tuple[str, str, Optional[np.ndarray]]]] = []
+    distincts: List[Tuple[str, jnp.ndarray]] = []
     for a in aggs:
         if a.fn == "count_star":
-            out[a.name] = Column(counts.astype(jnp.int64), NUMERIC)
+            fns.append("sum"); datas.append(ones)
+            meta.append((a.name, NUMERIC, None))
             continue
         col = evaluate(a.expr, table)
         if a.fn == "count":
-            data = col.data.astype(jnp.int64)
-            ones = jnp.ones(table.num_rows, jnp.int64)
-            out[a.name] = Column(jax.ops.segment_sum(ones, gids, n_groups), NUMERIC)
+            fns.append("sum"); datas.append(ones)
+            meta.append((a.name, NUMERIC, None))
         elif a.fn in ("sum", "min", "max"):
             data = col.data
             if a.fn == "sum" and data.dtype.kind == "b":
                 data = data.astype(jnp.int64)
             if a.fn == "sum" and data.dtype == jnp.float32:
                 data = data.astype(jnp.float64)
-            res = _segment(a.fn, data, gids, n_groups)
+            fns.append(a.fn); datas.append(data)
             kind = col.kind if a.fn in ("min", "max") else NUMERIC
-            out[a.name] = Column(res, kind, col.dictionary if kind == STRING else None)
+            meta.append((a.name, kind,
+                         col.dictionary if kind == STRING else None))
         elif a.fn == "avg":
-            data = col.data.astype(jnp.float64)
-            s = jax.ops.segment_sum(data, gids, n_groups)
-            out[a.name] = Column(s / jnp.maximum(counts, 1.0), NUMERIC)
+            fns.append("avg"); datas.append(col.data)
+            meta.append((a.name, NUMERIC, None))
         elif a.fn == "count_distinct":
-            vals = np.asarray(col.data)
-            pairs = np.stack([gids_np, vals.astype(np.int64)])
-            uniq_pairs = np.unique(pairs, axis=1)
-            cd = np.zeros(n_groups, np.int64)
-            np.add.at(cd, uniq_pairs[0], 1)
-            out[a.name] = Column(jnp.asarray(cd), NUMERIC)
+            distincts.append((a.name, col.data))
+            meta.append(None)
         else:
             raise ValueError(f"unknown aggregate {a.fn}")
-    return Table(out)
+
+    arrs = _group_key_arrays(table, keys) if keys and n else None
+    dense = _dense_pack(arrs, n) if arrs is not None and not distincts else None
+    if dense is not None:
+        # dense keys: factorization + reductions fused, a single host sync
+        _, results, rep, ng = _dense_aggregate_core(
+            dense[0], tuple(datas), tuple(fns), dense[1])
+        k = int(ng)
+        rep_idx = rep[:k]
+        uniq = Table({key: table[key].take(rep_idx) for key in keys})
+        results = tuple(r[:k] for r in results)
+        gids = None
+        n_groups = k
+    else:
+        if arrs is not None:
+            # key arrays (and the dense bounds check) already computed above
+            gids, rep, ng = _factorize_core(tuple(arrs))
+            n_groups = int(ng)
+            uniq = Table({key: table[key].take(rep[:n_groups])
+                          for key in keys})
+        else:
+            gids = jnp.zeros(n, jnp.int64)
+            uniq = Table({})
+            n_groups = 1
+        _, results = _aggregate_core(gids, tuple(datas), tuple(fns), n_groups)
+
+    out: Dict[str, Column] = {}
+    it = iter(results)
+    for m in meta:
+        if m is None:
+            continue
+        name, kind, dictionary = m
+        out[name] = Column(next(it), kind, dictionary)
+    for name, vals in distincts:
+        out[name] = Column(_count_distinct(gids, vals, n_groups), NUMERIC)
+    # preserve the requested output column order
+    return Table({**uniq.columns, **{a.name: out[a.name] for a in aggs}})
 
 
 # ---------------------------------------------------------------------------

@@ -45,6 +45,20 @@ class Expr:
     def __hash__(self):  # needed because __eq__ is overloaded
         return id(self)
 
+    def equals(self, other) -> bool:
+        """Structural equality — the safe idiom for comparing expressions.
+
+        ``==`` is overloaded to *build* a BinOp node, so anything that calls
+        it for truth — ``list.remove``, ``in``, ``.index`` — silently
+        misbehaves on Expr lists (every element "equals" every other, since
+        a BinOp is truthy).  Optimizer/executor code must use ``equals`` /
+        ``same`` or identity (``is``) instead.
+        """
+        return expr_equal(self, other)
+
+    # alias: reads better in membership helpers (any(x.same(e) for e in xs))
+    same = equals
+
     def columns(self) -> List[str]:
         """Free column references (for projection pruning)."""
         out: List[str] = []

@@ -2,10 +2,12 @@
 
 Two implementations, per DESIGN.md §2:
 
-* ``hash_join`` — the **eager** path (dynamic output size, host-dispatched like
-  libcudf's stream model).  Internally sort-merge on factorized keys, which is
-  exact for arbitrary multiplicity and doubles as the correctness oracle.
-  Supports inner / left / semi / anti / mark.
+* ``hash_join`` — the **eager** path (dynamic output size, like libcudf's
+  stream model, but device-resident end to end).  Internally sort-merge on
+  factorized keys, exact for arbitrary multiplicity; the match counting and
+  run expansion are jit-compiled two-stage (the dynamic output size is the
+  single scalar sync between them).  Supports inner / left / semi / anti /
+  mark, and doubles as the correctness oracle for the fused probe path.
 
 * ``StaticHashTable`` — the **static-shape** path used inside jit /
   shard_map / Pallas: an atomics-free open-addressing table built with
@@ -16,12 +18,14 @@ Two implementations, per DESIGN.md §2:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kops
 from .table import BOOL, NUMERIC, STRING, Column, Table, unify_string_keys
 
 # ---------------------------------------------------------------------------
@@ -29,39 +33,51 @@ from .table import BOOL, NUMERIC, STRING, Column, Table, unify_string_keys
 # ---------------------------------------------------------------------------
 
 
-def _as_int_keys(left: Column, right: Column) -> Tuple[np.ndarray, np.ndarray]:
+def _minmax(*arrays) -> Tuple[int, int]:
+    """(min, max) over possibly-empty device arrays, as python ints.
+
+    A scalar sync per key column — metadata only, never a column transfer."""
+    lo, hi = 0, 0
+    for a in arrays:
+        if a.shape[0]:
+            lo = min(lo, int(a.min()))
+            hi = max(hi, int(a.max()))
+    return lo, hi
+
+
+def _as_int_keys(left: Column, right: Column) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Bring a (probe, build) key column pair into a shared integer space."""
     if left.kind == STRING or right.kind == STRING:
         left, right = unify_string_keys(left, right)
-    l = np.asarray(left.data)
-    r = np.asarray(right.data)
+    l = jnp.asarray(left.data)
+    r = jnp.asarray(right.data)
     if l.dtype.kind == "f" or r.dtype.kind == "f":
-        # factorize floats exactly via unique over the union
-        uni = np.unique(np.concatenate([l, r]))
-        l = np.searchsorted(uni, l)
-        r = np.searchsorted(uni, r)
-    return l.astype(np.int64), r.astype(np.int64)
+        # factorize floats exactly via unique over the union (device-side)
+        uni = jnp.unique(jnp.concatenate([l, r]))
+        l = jnp.searchsorted(uni, l)
+        r = jnp.searchsorted(uni, r)
+    return l.astype(jnp.int64), r.astype(jnp.int64)
 
 
 def combine_keys(
     probe_cols: Sequence[Column], build_cols: Sequence[Column]
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pack multi-column join keys into one int64 key per row (exact)."""
     assert len(probe_cols) == len(build_cols) and probe_cols
     pk, bk = _as_int_keys(probe_cols[0], build_cols[0])
-    base_min = min(pk.min(initial=0), bk.min(initial=0))
+    base_min, _ = _minmax(pk, bk)
     pk, bk = pk - base_min, bk - base_min
     for pc, bc in zip(probe_cols[1:], build_cols[1:]):
         p2, b2 = _as_int_keys(pc, bc)
-        m = min(p2.min(initial=0), b2.min(initial=0))
+        m, mx = _minmax(p2, b2)
         p2, b2 = p2 - m, b2 - m
-        card = int(max(p2.max(initial=0), b2.max(initial=0))) + 1
-        hi = int(max(pk.max(initial=0), bk.max(initial=0)))
+        card = mx - m + 1
+        _, hi = _minmax(pk, bk)
         if hi * card > 2**62:
             # re-factorize to dense ranks to avoid overflow
-            uni = np.unique(np.concatenate([pk, bk]))
-            pk = np.searchsorted(uni, pk)
-            bk = np.searchsorted(uni, bk)
+            uni = jnp.unique(jnp.concatenate([pk, bk]))
+            pk = jnp.searchsorted(uni, pk)
+            bk = jnp.searchsorted(uni, bk)
         pk = pk * card + p2
         bk = bk * card + b2
     return pk, bk
@@ -70,6 +86,64 @@ def combine_keys(
 # ---------------------------------------------------------------------------
 # eager join (dynamic shapes)
 # ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _join_match(pk: jnp.ndarray, bk: jnp.ndarray):
+    """Sort-merge match counting (compiled): → (build order, lo, counts)."""
+    order = jnp.argsort(bk, stable=True)
+    bk_sorted = bk[order]
+    lo = jnp.searchsorted(bk_sorted, pk, side="left")
+    hi = jnp.searchsorted(bk_sorted, pk, side="right")
+    return order, lo, hi - lo
+
+
+@functools.partial(jax.jit, static_argnames=("total",))
+def _join_expand(order, lo, counts, counts_out, total: int):
+    """Expand match runs into gather indices (compiled, bucketed ``total``).
+
+    ``total`` is padded to a bucket; ``jnp.repeat`` fills the tail with the
+    last value and the caller slices to the true output size.
+    """
+    n = lo.shape[0]
+    probe_idx = jnp.repeat(jnp.arange(n), counts_out,
+                           total_repeat_length=total)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts_out.dtype), jnp.cumsum(counts_out[:-1])])
+    intra = jnp.arange(total) - jnp.repeat(starts, counts_out,
+                                           total_repeat_length=total)
+    build_pos = lo[probe_idx] + intra
+    matched = counts[probe_idx] > 0
+    nb = order.shape[0]
+    build_pos = jnp.where(matched, jnp.clip(build_pos, 0, max(nb - 1, 0)), 0)
+    build_idx = order[build_pos]
+    return probe_idx, build_idx, matched
+
+
+def _empty_build_join(probe: Table, build: Table, how: str,
+                      mark_name: str) -> Table:
+    n = probe.num_rows
+    if how == "mark":
+        return probe.with_column(mark_name,
+                                 Column(jnp.zeros((n,), bool), BOOL))
+    if how == "anti":
+        return probe
+    if how == "left":
+        out = dict(probe.columns)
+        for name, col in build.columns.items():
+            if name not in out:
+                out[name] = Column(jnp.zeros((n,), col.data.dtype), col.kind,
+                                   col.dictionary)
+        out["__matched"] = Column(jnp.zeros((n,), bool), BOOL)
+        return Table(out)
+    # inner / semi: no matches
+    empty = jnp.zeros((0,), jnp.int64)
+    out = {name: col.take(empty) for name, col in probe.columns.items()}
+    if how == "inner":
+        for name, col in build.columns.items():
+            if name not in out:
+                out[name] = col.take(empty)
+    return Table(out)
 
 
 def hash_join(
@@ -87,48 +161,57 @@ def hash_join(
     are garbage (gathered at index 0) and must be guarded by ``__matched``.
     ``mark`` returns the probe table + BOOL ``mark_name`` column (EXISTS / IN).
     """
-    pk, bk = combine_keys([probe[k] for k in probe_keys], [build[k] for k in build_keys])
+    if probe.num_rows == 0 or build.num_rows == 0:
+        if probe.num_rows == 0 and how in ("inner", "left"):
+            out = {n: c for n, c in probe.columns.items()}
+            empty = jnp.zeros((0,), jnp.int64)
+            for n, c in build.columns.items():
+                if n not in out:
+                    out[n] = c.take(empty)
+            if how == "left":
+                out["__matched"] = Column(jnp.zeros((0,), bool), BOOL)
+            return Table(out)
+        if build.num_rows == 0:
+            return _empty_build_join(probe, build, how, mark_name)
 
-    order = np.argsort(bk, kind="stable")
-    bk_sorted = bk[order]
-    lo = np.searchsorted(bk_sorted, pk, side="left")
-    hi = np.searchsorted(bk_sorted, pk, side="right")
-    counts = hi - lo
+    pk, bk = combine_keys([probe[k] for k in probe_keys], [build[k] for k in build_keys])
+    order, lo, counts = _join_match(pk, bk)
 
     if how == "mark":
-        return probe.with_column(mark_name, Column(jnp.asarray(counts > 0), BOOL))
+        return probe.with_column(mark_name, Column(counts > 0, BOOL))
     if how == "semi":
-        return probe.take(jnp.asarray(np.nonzero(counts > 0)[0]))
+        sel, k = kops.compact(counts > 0)
+        return probe.take(sel[: int(k)])
     if how == "anti":
-        return probe.take(jnp.asarray(np.nonzero(counts == 0)[0]))
+        sel, k = kops.compact(counts == 0)
+        return probe.take(sel[: int(k)])
 
     if how == "left":
-        counts_out = np.maximum(counts, 1)
+        counts_out = jnp.maximum(counts, 1)
     elif how == "inner":
         counts_out = counts
     else:
         raise ValueError(f"unknown join type {how}")
 
+    # dynamic output size: the single scalar sync of the eager join.  The
+    # expansion runs compiled with the output padded to a bucket, so repeat
+    # executions replay cached programs.
     total = int(counts_out.sum())
-    probe_idx = np.repeat(np.arange(len(pk)), counts_out)
-    # position within each probe row's match run
-    starts = np.zeros(len(pk), dtype=np.int64)
-    np.cumsum(counts_out[:-1], out=starts[1:])
-    intra = np.arange(total) - np.repeat(starts, counts_out)
-    build_pos = lo[probe_idx] + intra
-    matched = counts[probe_idx] > 0
-    build_pos = np.where(matched, np.clip(build_pos, 0, max(len(bk) - 1, 0)), 0)
-    build_idx = order[build_pos] if len(bk) else np.zeros(total, dtype=np.int64)
+    t_pad = kops.bucket_size(total)
+    probe_idx, build_idx, matched = _join_expand(order, lo, counts,
+                                                 counts_out, t_pad)
+    probe_idx = probe_idx[:total]
+    build_idx = build_idx[:total]
 
     out = {}
     for name, col in probe.columns.items():
-        out[name] = col.take(jnp.asarray(probe_idx))
+        out[name] = col.take(probe_idx)
     for name, col in build.columns.items():
         if name in out:  # key columns equal by definition; keep probe copy
             continue
-        out[name] = col.take(jnp.asarray(build_idx))
+        out[name] = col.take(build_idx)
     if how == "left":
-        out["__matched"] = Column(jnp.asarray(matched), BOOL)
+        out["__matched"] = Column(matched[:total], BOOL)
     return Table(out)
 
 

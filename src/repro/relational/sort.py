@@ -1,9 +1,9 @@
 """Order-by / top-k.
 
-Eager path: host lexsort on decoded sort keys (order-preserving dictionary
-codes make string sorts integer sorts).  Sort inputs in TPC-H are tiny
-(post-aggregation), matching the paper's observation that order-by never
-dominates; the eager host sort mirrors libcudf's materialize-then-sort.
+Eager path: device lexsort on the encoded sort keys (order-preserving
+dictionary codes make string sorts integer sorts, so the whole sort runs on
+device without decoding).  Sort inputs in TPC-H are tiny (post-aggregation),
+matching the paper's observation that order-by never dominates.
 
 Static path: ``static_topk`` — mask-aware top-k on a single packed key for
 compiled fragments.
@@ -29,23 +29,23 @@ class SortKey:
 def sort_table(table: Table, keys: Sequence[SortKey], limit: int | None = None) -> Table:
     if table.num_rows == 0:
         return table
-    arrays: List[np.ndarray] = []
+    arrays: List[jnp.ndarray] = []
     for k in keys:
         col = table[k.name]
-        a = np.asarray(col.data)
+        a = jnp.asarray(col.data)
         if a.dtype.kind == "b":
-            a = a.astype(np.int8)
+            a = a.astype(jnp.int8)
         if not k.ascending:
             if a.dtype.kind == "f":
                 a = -a
             else:
-                a = -(a.astype(np.int64))
+                a = -(a.astype(jnp.int64))
         arrays.append(a)
-    # np.lexsort: last key is primary
-    order = np.lexsort(tuple(reversed(arrays)))
+    # lexsort: last key is primary
+    order = jnp.lexsort(tuple(reversed(arrays)))
     if limit is not None:
         order = order[:limit]
-    return table.take(jnp.asarray(order))
+    return table.take(order)
 
 
 def static_topk(packed_key: jnp.ndarray, valid: jnp.ndarray, k: int):

@@ -196,9 +196,14 @@ class Table:
         return self.take(jnp.arange(min(n, self.num_rows)))
 
     def filter_mask(self, mask: Array) -> "Table":
-        """Eager compaction (the libcudf apply_boolean_mask analogue)."""
-        idx = jnp.nonzero(np.asarray(mask))[0]
-        return self.take(idx)
+        """Eager compaction (the libcudf apply_boolean_mask analogue).
+
+        Device-side, via the jit-compiled ``kernels.ops.compact``: the
+        dynamic output size is the one scalar sync; selected indices and
+        the gather stay on device."""
+        from ..kernels import ops as kops
+        idx, count = kops.compact(jnp.asarray(mask))
+        return self.take(idx[: int(count)])
 
     @staticmethod
     def concat(tables: Sequence["Table"]) -> "Table":

@@ -1,5 +1,11 @@
+import os
+
 import numpy as np
 import pytest
+
+# CI matrix tier: REPRO_USE_KERNELS=1 runs the whole suite with the Pallas
+# operator backend enabled, so kernel routing is exercised at suite scale.
+USE_KERNELS = bool(int(os.environ.get("REPRO_USE_KERNELS", "0")))
 
 
 @pytest.fixture(scope="session")
@@ -12,7 +18,7 @@ def tpch_db():
 def tpch_engine(tpch_db):
     from repro.core.executor import SiriusEngine
     from repro.data.tpch import load_into_engine
-    eng = SiriusEngine()
+    eng = SiriusEngine(use_kernels=USE_KERNELS)
     load_into_engine(eng, tpch_db)
     return eng
 

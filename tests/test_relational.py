@@ -111,6 +111,29 @@ def test_extract_year():
 
 
 # ---------------------------------------------------------------------------
+# Expr.__eq__ footgun (builds BinOp) vs the structural equals()/same() idiom
+# ---------------------------------------------------------------------------
+
+
+def test_expr_eq_overload_corrupts_list_operations():
+    """Regression: ``==`` on Expr builds a BinOp (truthy), so list.remove /
+    ``in`` match the *first* element, whatever it is."""
+    a, b = Col("a"), Col("b")
+    lst = [a, b]
+    lst.remove(b)             # intends to drop b…
+    assert lst == [b]         # …but dropped a: the footgun, pinned
+    assert (Col("zzz") in [a, b]) is True   # membership is always True
+
+    # the safe idioms
+    assert a.equals(Col("a")) and not a.equals(b)
+    assert a.same(Col("a"))
+    kept = [e for e in [a, b] if not e.equals(b)]
+    assert len(kept) == 1 and kept[0] is a
+    assert a.equals(Col("x") + 1) is False
+    assert (Col("x") + 1).equals(Col("x") + 1)
+
+
+# ---------------------------------------------------------------------------
 # joins
 # ---------------------------------------------------------------------------
 
