@@ -1,0 +1,88 @@
+"""ClickBench analogue of bench_tpch_single: hits-table sample, accelerator
+engine (hot run) vs the pure-numpy host engine, per query.
+
+The paper's second headline number is 7.4x cost efficiency on ClickBench;
+this container has no accelerator, so — exactly like BENCH_tpch.json — the
+artifact is a *structure* validation: same SQL, same results, per-query
+timings for the fused jnp path, plus compiler/string-subsystem statistics
+showing the string predicates stayed on the device path (see DESIGN.md
+"Benchmark protocol").
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def run(n_rows: int = 200_000, repeats: int = 2,
+        json_path: str | None = None, use_kernels: bool = False):
+    from repro.core.executor import SiriusEngine
+    from repro.core.fallback import FallbackEngine
+    from repro.data import clickbench as cb
+    from repro.relational import strings
+    from repro.sql import sql_to_plan
+
+    db = cb.generate(n_rows)
+    catalog = cb.clickbench_catalog(n_rows)
+    eng = SiriusEngine(use_kernels=use_kernels)
+    t0 = time.perf_counter()
+    cb.load_into_engine(eng, db)
+    cold_load_s = time.perf_counter() - t0
+    fb = FallbackEngine(db)
+
+    rows = []
+    for qid, sql in cb.CLICKBENCH_QUERIES.items():
+        plan = sql_to_plan(sql, catalog)
+        eng.execute(plan)                     # warm: compile regions
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            eng.execute(plan)
+        t_eng = (time.perf_counter() - t0) / repeats
+
+        fb.execute(plan)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fb.execute(plan)
+        t_fb = (time.perf_counter() - t0) / repeats
+        rows.append((qid, t_eng, t_fb))
+
+    print(f"# clickbench rows={n_rows} cold_load_s={cold_load_s:.2f}")
+    print("name,us_per_call,derived")
+    for qid, t_eng, t_fb in rows:
+        print(f"clickbench_{qid}_engine,{t_eng*1e6:.0f},host_over_engine="
+              f"{t_fb/t_eng:.2f}x")
+        print(f"clickbench_{qid}_hostbaseline,{t_fb*1e6:.0f},")
+    tot_e = sum(r[1] for r in rows)
+    tot_f = sum(r[2] for r in rows)
+    geo = float(np.exp(np.mean([np.log(r[2] / r[1]) for r in rows])))
+    print(f"clickbench_total_engine,{tot_e*1e6:.0f},"
+          f"total_ratio={tot_f/tot_e:.2f}x")
+    print(f"clickbench_total_hostbaseline,{tot_f*1e6:.0f},"
+          f"geomean_ratio={geo:.2f}x")
+
+    if json_path:
+        payload = {
+            "workload": "clickbench",
+            "rows": n_rows,
+            "repeats": repeats,
+            "use_kernels": use_kernels,
+            "cold_load_s": round(cold_load_s, 4),
+            "queries": {qid: {"engine_s": round(t_eng, 6),
+                              "host_s": round(t_fb, 6)}
+                        for qid, t_eng, t_fb in rows},
+            "total_engine_s": round(tot_e, 6),
+            "total_host_s": round(tot_f, 6),
+            "string_subsystem": dict(strings.stats),
+            "compiler": dict(eng.compiler.stats),
+            "fallback_queries": eng.executor.fallback_queries,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_clickbench.json")

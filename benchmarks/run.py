@@ -1,6 +1,7 @@
 """Benchmark harness — one benchmark per paper table/figure.
 
   bench_tpch_single   Figure 4: single-node TPC-H, engine vs host baseline
+  bench_clickbench    ClickBench hits sample, engine vs host baseline
   bench_breakdown     Figure 5: per-operator breakdown
   bench_distributed   Table 2: distributed Q1/Q3/Q6(+Q12), compute/exchange/other
   bench_costmodel     Table 1/SS4.2: equal-rental-cost projection (labeled)
@@ -69,11 +70,13 @@ def bench_kernels():
 
 
 def main() -> None:
-    from . import (bench_breakdown, bench_costmodel, bench_distributed,
-                   bench_tpch_single, roofline)
+    from . import (bench_breakdown, bench_clickbench, bench_costmodel,
+                   bench_distributed, bench_tpch_single, roofline)
     sections = {
         "tpch_single": lambda: bench_tpch_single.run(
             json_path="BENCH_tpch.json"),
+        "clickbench": lambda: bench_clickbench.run(
+            json_path="BENCH_clickbench.json"),
         "breakdown": lambda: bench_breakdown.run(),
         "distributed": lambda: bench_distributed.run(),
         "costmodel": lambda: bench_costmodel.run(),

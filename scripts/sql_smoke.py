@@ -1,50 +1,83 @@
 """SQL-frontend smoke check: parse, optimize and EXPLAIN every SQL-text
-TPC-H query *without executing it* (no data generation, no engine).
+query of a workload *without executing it* (no data generation, no engine).
+
+Workloads:
+  * ``tpch``       — all 22 TPC-H queries (``SQL_QUERIES``)
+  * ``clickbench`` — the ClickBench hits-table query set
+  * ``all``        — both (the CI default)
 
 Exit code is non-zero if any query fails to parse/bind/lower/optimize, if
 the optimized plan fails to round-trip through the JSON wire format, or if
 predicate pushdown failed to land a filter in a ReadRel where one is
 expected.  This is the fast CI job guarding the frontend.
 
-Run:  PYTHONPATH=src python scripts/sql_smoke.py [-v]
+Run:  PYTHONPATH=src python scripts/sql_smoke.py [--workload tpch|clickbench|all] [-v]
 """
 from __future__ import annotations
 
 import sys
 
 
-def main(verbose: bool = False) -> int:
+def check_workload(name: str, queries: dict, pushdown_qids, catalog,
+                   verbose: bool = False) -> int:
     from repro.core.plan import (
         ReadRel, explain, plan_equal, plan_from_json, plan_to_json, walk,
     )
-    from repro.data.tpch_queries import SQL_PUSHDOWN_QIDS, SQL_QUERIES
     from repro.sql import sql_to_plan
 
     failures = 0
-    for qid in sorted(SQL_QUERIES):
+    for qid in queries:
         try:
-            naive = sql_to_plan(SQL_QUERIES[qid], optimize=False)
-            opt = sql_to_plan(SQL_QUERIES[qid], optimize=True)
+            sql_to_plan(queries[qid], catalog, optimize=False)
+            opt = sql_to_plan(queries[qid], catalog, optimize=True)
             restored = plan_from_json(plan_to_json(opt))
             assert plan_equal(restored, opt), "wire-format round-trip drifted"
             pushed = [r for r in walk(opt)
                       if isinstance(r, ReadRel) and r.filter is not None]
-            if qid in SQL_PUSHDOWN_QIDS:
+            if qid in pushdown_qids:
                 assert pushed, "predicate pushdown reached no ReadRel"
             n_ops = sum(1 for _ in walk(opt))
-            print(f"Q{qid:>2}: ok — {n_ops} operators, "
+            print(f"{name} {qid!s:>4}: ok — {n_ops} operators, "
                   f"{len(pushed)} scan filter(s)")
             if verbose:
                 print(explain(opt))
                 print()
         except Exception as e:  # noqa: BLE001
             failures += 1
-            print(f"Q{qid:>2}: FAIL — {type(e).__name__}: {e}")
-    total = len(SQL_QUERIES)
-    print(f"\n{total - failures}/{total} SQL TPC-H queries parse, optimize "
-          "and explain cleanly")
+            print(f"{name} {qid!s:>4}: FAIL — {type(e).__name__}: {e}")
+    total = len(queries)
+    print(f"{total - failures}/{total} {name} queries parse, optimize "
+          "and explain cleanly\n")
+    return failures
+
+
+def main(workload: str = "all", verbose: bool = False) -> int:
+    if workload not in ("tpch", "clickbench", "all"):
+        print(f"unknown workload {workload!r}: expected tpch|clickbench|all")
+        return 2
+    failures = 0
+    if workload in ("tpch", "all"):
+        from repro.data.tpch_queries import SQL_PUSHDOWN_QIDS, SQL_QUERIES
+        failures += check_workload("tpch", dict(sorted(SQL_QUERIES.items())),
+                                   SQL_PUSHDOWN_QIDS, None, verbose)
+    if workload in ("clickbench", "all"):
+        from repro.data.clickbench import (
+            CLICKBENCH_QUERIES, CLICKBENCH_STRING_QIDS, clickbench_catalog,
+        )
+        # every string-predicate query must land its filter in the scan
+        pushdown = tuple(q for q in CLICKBENCH_STRING_QIDS if q != "q44x")
+        failures += check_workload("clickbench", CLICKBENCH_QUERIES,
+                                   pushdown, clickbench_catalog(), verbose)
     return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    sys.exit(main(verbose="-v" in sys.argv[1:]))
+    args = sys.argv[1:]
+    wl = "all"
+    if "--workload" in args:
+        i = args.index("--workload")
+        if i + 1 >= len(args):
+            print("--workload requires a value: tpch|clickbench|all")
+            sys.exit(2)
+        wl = args[i + 1]
+    sys.exit(main(wl, verbose="-v" in args))

@@ -521,6 +521,10 @@ class SiriusEngine:
                                          backend, profile=profile,
                                          compile_pipelines=compile_pipelines)
         self.host_tables: Dict[str, dict] = {}
+        # host-side string dictionaries harvested at registration — kept
+        # instead of the Tables themselves so the buffer manager stays free
+        # to spill device columns (a pinned Table would defeat eviction)
+        self.table_dictionaries: Dict[str, Dict[str, object]] = {}
 
     @property
     def compiler(self):
@@ -529,6 +533,14 @@ class SiriusEngine:
 
     def register(self, name: str, table: Table, host_data: Optional[dict] = None):
         self.buffers.cache_table(name, table)
+        dicts = {c: col.dictionary for c, col in table.columns.items()
+                 if col.dictionary is not None}
+        if dicts:
+            self.table_dictionaries[name] = dicts
+        else:
+            # re-registration may drop string columns; never leave stale
+            # dictionaries steering the optimizer's selectivity estimates
+            self.table_dictionaries.pop(name, None)
         if host_data is not None:
             self.host_tables[name] = host_data
 
@@ -536,9 +548,17 @@ class SiriusEngine:
         return self.executor.execute(plan)
 
     def sql(self, text: str, catalog=None, optimize: bool = True) -> Table:
-        """Drop-in entry point: SQL text → parse → optimize → execute."""
+        """Drop-in entry point: SQL text → parse → optimize → execute.
+
+        The optimizer's catalog is enriched with the registered tables'
+        string dictionaries, so LIKE / IN / prefix predicates are costed by
+        their measured dictionary hit rate instead of constants.
+        """
         from ..sql import run_sql
-        return run_sql(text, self, catalog=catalog, optimize=optimize)
+        from ..sql.binder import DEFAULT_CATALOG
+        cat = (catalog or DEFAULT_CATALOG).with_dictionaries(
+            self.table_dictionaries)
+        return run_sql(text, self, catalog=cat, optimize=optimize)
 
     def execute_with_fallback(self, plan: Rel):
         """Run on the accelerator engine; on failure, degrade to the host path."""

@@ -21,7 +21,7 @@ import numpy as np
 from ..relational.aggregate import AggSpec
 from ..relational.expressions import (
     Between, BinOp, Case, Cast, Col, Expr, ExtractYear, InList, Like, Lit,
-    Substr, UnOp, like_to_regex,
+    StartsWith, Substr, UnOp, like_to_regex,
 )
 from ..relational.table import DATE, STRING
 from .plan import (
@@ -100,6 +100,10 @@ def np_eval(expr: Expr, t: HostTable, engine: "FallbackEngine" = None) -> np.nda
         v = np.asarray(np_eval(expr.operand, t, engine), dtype="U")
         rx = like_to_regex(expr.pattern)
         hit = np.fromiter((rx.match(s) is not None for s in v), bool, len(v))
+        return ~hit if expr.negate else hit
+    if isinstance(expr, StartsWith):
+        v = np.asarray(np_eval(expr.operand, t, engine), dtype="U")
+        hit = np.char.startswith(v, expr.prefix)
         return ~hit if expr.negate else hit
     if isinstance(expr, Case):
         default = np_eval(expr.default, t, engine)

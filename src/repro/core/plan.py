@@ -29,7 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from ..relational.aggregate import AggSpec
 from ..relational.expressions import (
     Between, BinOp, Case, Cast, Col, Expr, ExtractYear, InList, Like, Lit,
-    Substr, UnOp,
+    StartsWith, Substr, UnOp,
 )
 from ..relational.sort import SortKey
 
@@ -130,8 +130,8 @@ class ScalarSubquery(Expr):
 # ---------------------------------------------------------------------------
 
 _EXPR_TYPES = {c.__name__: c for c in
-               (Col, Lit, BinOp, UnOp, Between, InList, Like, Case,
-                ExtractYear, Substr, Cast)}
+               (Col, Lit, BinOp, UnOp, Between, InList, Like, StartsWith,
+                Case, ExtractYear, Substr, Cast)}
 _REL_TYPES = {c.__name__: c for c in
               (ReadRel, FilterRel, ProjectRel, JoinRel, AggregateRel, SortRel,
                FetchRel, ExchangeRel)}

@@ -336,7 +336,11 @@ def q15() -> Rel:
                                      "s_phone"]),
                 _q15_revenue(), ["s_suppkey"], ["l_suppkey"], "inner")
     f = FilterRel(j, C("total_revenue") >= best)
-    return SortRel(f, [K("s_suppkey")])
+    proj = ProjectRel(f, [
+        ("s_suppkey", C("s_suppkey")), ("s_name", C("s_name")),
+        ("s_address", C("s_address")), ("s_phone", C("s_phone")),
+        ("total_revenue", C("total_revenue"))])
+    return SortRel(proj, [K("s_suppkey")])
 
 
 def q16() -> Rel:
@@ -491,7 +495,7 @@ QUERIES = {i: fn for i, fn in enumerate(
 
 
 # ---------------------------------------------------------------------------
-# SQL-text versions (the paper's *actual* input format).
+# SQL-text versions (the paper's *actual* input format) — all 22 queries.
 #
 # These feed the SQL frontend (repro.sql) + rule-based optimizer
 # (repro.optimizer) and are validated row-for-row against the hand-built
@@ -505,7 +509,17 @@ QUERIES = {i: fn for i, fn in enumerate(
 #   * Q11's HAVING threshold multiplies inside the scalar subquery instead
 #     of outside — same arithmetic;
 #   * Q22 groups by the substring expression directly rather than through a
-#     derived table (derived tables are outside the frontend's subset).
+#     derived table (the expression-valued group key is the engine's native
+#     shape);
+#   * Q7/Q8/Q9 inline the spec's derived-table column list as select-item
+#     aliases and Q15 inlines the spec's revenue *view* as a derived table —
+#     same plans after lowering;
+#   * Q21 replaces the spec's lineitem self-joins (exists l2 / not exists
+#     l3) with the equivalent per-order distinct-supplier-count subqueries
+#     the hand-built plan uses: >1 distinct suppliers overall and exactly 1
+#     distinct late supplier — the rewrite DuckDB's flattening produces;
+#   * Q15 compares total_revenue with = (spec) where the hand-built plan
+#     uses >= against the max — identical row sets by definition of max.
 # ---------------------------------------------------------------------------
 
 SQL_QUERIES = {
@@ -523,6 +537,27 @@ from lineitem
 where l_shipdate <= date '1998-09-02'
 group by l_returnflag, l_linestatus
 order by l_returnflag, l_linestatus
+""",
+    2: """
+select s_acctbal, s_name, n_name, p_partkey, p_mfgr, s_address, s_phone,
+       s_comment
+from part, supplier, partsupp, nation, region
+where p_partkey = ps_partkey
+  and s_suppkey = ps_suppkey
+  and p_size = 15
+  and p_type like '%BRASS'
+  and s_nationkey = n_nationkey
+  and n_regionkey = r_regionkey
+  and r_name = 'EUROPE'
+  and ps_supplycost = (select min(ps_supplycost)
+                       from partsupp, supplier, nation, region
+                       where p_partkey = ps_partkey
+                         and s_suppkey = ps_suppkey
+                         and s_nationkey = n_nationkey
+                         and n_regionkey = r_regionkey
+                         and r_name = 'EUROPE')
+order by s_acctbal desc, n_name, s_name, p_partkey
+limit 100
 """,
     3: """
 select l_orderkey, sum(l_extendedprice * (1 - l_discount)) as revenue,
@@ -571,6 +606,63 @@ where l_shipdate >= date '1994-01-01'
   and l_discount between 0.05 and 0.07
   and l_quantity < 24
 """,
+    7: """
+select supp_nation, cust_nation, l_year, sum(volume) as revenue
+from (select n1.n_name as supp_nation, n2.n_name as cust_nation,
+             extract(year from l_shipdate) as l_year,
+             l_extendedprice * (1 - l_discount) as volume
+      from supplier, lineitem, orders, customer, nation n1, nation n2
+      where s_suppkey = l_suppkey
+        and o_orderkey = l_orderkey
+        and c_custkey = o_custkey
+        and s_nationkey = n1.n_nationkey
+        and c_nationkey = n2.n_nationkey
+        and ((n1.n_name = 'FRANCE' and n2.n_name = 'GERMANY')
+          or (n1.n_name = 'GERMANY' and n2.n_name = 'FRANCE'))
+        and l_shipdate between date '1995-01-01' and date '1996-12-31')
+     as shipping
+group by supp_nation, cust_nation, l_year
+order by supp_nation, cust_nation, l_year
+""",
+    8: """
+select o_year,
+       sum(case when nation = 'BRAZIL' then volume else 0 end)
+       / sum(volume) as mkt_share
+from (select extract(year from o_orderdate) as o_year,
+             l_extendedprice * (1 - l_discount) as volume,
+             n2.n_name as nation
+      from part, supplier, lineitem, orders, customer, nation n1,
+           nation n2, region
+      where p_partkey = l_partkey
+        and s_suppkey = l_suppkey
+        and l_orderkey = o_orderkey
+        and o_custkey = c_custkey
+        and c_nationkey = n1.n_nationkey
+        and n1.n_regionkey = r_regionkey
+        and r_name = 'AMERICA'
+        and s_nationkey = n2.n_nationkey
+        and o_orderdate between date '1995-01-01' and date '1996-12-31'
+        and p_type = 'ECONOMY ANODIZED STEEL') as all_nations
+group by o_year
+order by o_year
+""",
+    9: """
+select nation, o_year, sum(amount) as sum_profit
+from (select n_name as nation,
+             extract(year from o_orderdate) as o_year,
+             l_extendedprice * (1 - l_discount)
+               - ps_supplycost * l_quantity as amount
+      from part, supplier, lineitem, partsupp, orders, nation
+      where s_suppkey = l_suppkey
+        and ps_suppkey = l_suppkey
+        and ps_partkey = l_partkey
+        and p_partkey = l_partkey
+        and o_orderkey = l_orderkey
+        and s_nationkey = n_nationkey
+        and p_name like '%green%') as profit
+group by nation, o_year
+order by nation, o_year desc
+""",
     10: """
 select c_custkey, c_name, sum(l_extendedprice * (1 - l_discount)) as revenue,
        c_acctbal, n_name, c_address, c_phone, c_comment
@@ -618,6 +710,16 @@ where o_orderkey = l_orderkey
 group by l_shipmode
 order by l_shipmode
 """,
+    13: """
+select c_count, count(*) as custdist
+from (select c_custkey, count(o_orderkey) as c_count
+      from customer left outer join orders
+        on c_custkey = o_custkey
+       and o_comment not like '%special%requests%'
+      group by c_custkey) as c_orders
+group by c_count
+order by custdist desc, c_count desc
+""",
     14: """
 select 100.00 * sum(case when p_type like 'PROMO%'
                          then l_extendedprice * (1 - l_discount)
@@ -627,6 +729,26 @@ from lineitem, part
 where l_partkey = p_partkey
   and l_shipdate >= date '1995-09-01'
   and l_shipdate < date '1995-10-01'
+""",
+    15: """
+select s_suppkey, s_name, s_address, s_phone, total_revenue
+from supplier,
+     (select l_suppkey, sum(l_extendedprice * (1 - l_discount))
+          as total_revenue
+      from lineitem
+      where l_shipdate >= date '1996-01-01'
+        and l_shipdate < date '1996-04-01'
+      group by l_suppkey) as revenue0
+where s_suppkey = l_suppkey
+  and total_revenue = (select max(total_revenue)
+                       from (select l_suppkey,
+                                    sum(l_extendedprice * (1 - l_discount))
+                                        as total_revenue
+                             from lineitem
+                             where l_shipdate >= date '1996-01-01'
+                               and l_shipdate < date '1996-04-01'
+                             group by l_suppkey) as revenue1)
+order by s_suppkey
 """,
     16: """
 select p_brand, p_type, p_size, count(distinct ps_suppkey) as supplier_cnt
@@ -639,6 +761,16 @@ where p_partkey = ps_partkey
                          where s_comment like '%Customer%Complaints%')
 group by p_brand, p_type, p_size
 order by supplier_cnt desc, p_brand, p_type, p_size
+""",
+    17: """
+select sum(l_extendedprice) / 7.0 as avg_yearly
+from lineitem, part
+where p_partkey = l_partkey
+  and p_brand = 'Brand#23'
+  and p_container = 'MED BOX'
+  and l_quantity < (select 0.2 * avg(l_quantity)
+                    from lineitem
+                    where l_partkey = p_partkey)
 """,
     18: """
 select c_name, c_custkey, o_orderkey, o_orderdate, o_totalprice,
@@ -671,6 +803,43 @@ where l_partkey = p_partkey
         and p_container in ('LG CASE', 'LG BOX', 'LG PACK', 'LG PKG')
         and l_quantity between 20 and 30
         and p_size between 1 and 15))
+""",
+    20: """
+select s_name, s_address
+from supplier, nation
+where s_suppkey in (select ps_suppkey
+                    from partsupp
+                    where ps_partkey in (select p_partkey from part
+                                         where p_name like 'forest%')
+                      and ps_availqty > (select 0.5 * sum(l_quantity)
+                                         from lineitem
+                                         where l_partkey = ps_partkey
+                                           and l_suppkey = ps_suppkey
+                                           and l_shipdate >= date '1994-01-01'
+                                           and l_shipdate < date '1995-01-01'))
+  and s_nationkey = n_nationkey
+  and n_name = 'CANADA'
+order by s_name
+""",
+    21: """
+select s_name, count(*) as numwait
+from lineitem, supplier, nation
+where s_suppkey = l_suppkey
+  and l_receiptdate > l_commitdate
+  and l_orderkey in (select o_orderkey from orders
+                     where o_orderstatus = 'F')
+  and l_orderkey in (select l_orderkey from lineitem
+                     group by l_orderkey
+                     having count(distinct l_suppkey) > 1)
+  and l_orderkey in (select l_orderkey from lineitem
+                     where l_receiptdate > l_commitdate
+                     group by l_orderkey
+                     having count(distinct l_suppkey) = 1)
+  and s_nationkey = n_nationkey
+  and n_name = 'SAUDI ARABIA'
+group by s_name
+order by numwait desc, s_name
+limit 100
 """,
     22: """
 select substring(c_phone, 1, 2) as cntrycode,

@@ -189,10 +189,24 @@ def _push(rel: Rel, preds: List[Expr], catalog) -> Rel:
 
     if isinstance(rel, ProjectRel):
         passthrough = _passthrough_cols(rel, catalog)
+        # pure renames (out_name -> Col(src)) are invertible: predicates on
+        # the renamed output can be rewritten to the source name and pushed
+        # through — this is what carries filters into aliased self-join and
+        # derived-table scans, whose every column sits under a rename
+        rename = {n: e.name for n, e in rel.exprs if isinstance(e, Col)}
         down, keep = [], []
         for p in preds:
             cols = set(p.columns())
-            (down if cols and cols <= passthrough else keep).append(p)
+            if not cols:
+                keep.append(p)
+            elif cols <= passthrough:
+                down.append(p)
+            elif cols <= (passthrough | set(rename)):
+                down.append(transform_expr(
+                    p, lambda n: Col(rename[n.name])
+                    if isinstance(n, Col) and n.name in rename else n))
+            else:
+                keep.append(p)
         new_input = _push(rel.input, down, catalog)
         rel = _replace_children(rel, input=new_input)
         return _wrap_filter(rel, keep, catalog)
@@ -467,7 +481,7 @@ def order_conjuncts(rel: Rel, catalog=None) -> Rel:
         cs = _conjuncts(e)
         if len(cs) < 2:
             return e
-        cs.sort(key=selectivity)
+        cs.sort(key=lambda c: selectivity(c, catalog))
         return _and_all(cs)
 
     if isinstance(rel, ReadRel) and rel.filter is not None:

@@ -5,6 +5,14 @@ classical System-R-style optimizers fall back to when stats are missing.
 They only need to be good enough to (a) pick hash-join build sides and
 (b) order joins so selective dimension tables apply early, which is what the
 paper's host-optimizer (DuckDB) contributes to Sirius plans.
+
+String predicates get one real statistic for free: the dictionary.  When
+the catalog carries column dictionaries (``Catalog.with_dictionaries`` —
+the engine attaches them from its loaded tables), LIKE / IN / prefix /
+equality selectivities are the predicate's measured *hit rate over the
+dictionary* instead of the Selinger constants.  Codes are assumed uniform
+(no per-code frequencies), and the constants remain the fallback whenever
+no dictionary is available.
 """
 from __future__ import annotations
 
@@ -14,8 +22,9 @@ from ..core.plan import (
     AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
     ReadRel, Rel, ScalarSubquery, SortRel,
 )
+from ..relational import strings
 from ..relational.expressions import (
-    Between, BinOp, Expr, InList, Like, Lit, UnOp, walk_expr,
+    Between, BinOp, Col, Expr, InList, Like, Lit, StartsWith, UnOp, walk_expr,
 )
 
 # default selectivity guesses (classic Selinger-style constants)
@@ -27,31 +36,59 @@ SEL_IN_PER_VALUE = 0.05
 SEL_DEFAULT = 0.5
 
 
-def selectivity(e: Expr) -> float:
-    """Heuristic fraction of rows satisfying predicate ``e``."""
+def _dictionary_of(e: Expr, catalog) -> Optional[object]:
+    """Dictionary of a bare-column operand, when the catalog knows it."""
+    if catalog is None or not isinstance(e, Col):
+        return None
+    getter = getattr(catalog, "dictionary_for", None)
+    return getter(e.name) if getter is not None else None
+
+
+def selectivity(e: Expr, catalog=None) -> float:
+    """Heuristic fraction of rows satisfying predicate ``e``.
+
+    With a dictionary-carrying ``catalog``, string predicates return their
+    dictionary hit rate; otherwise the classic constants apply.
+    """
     if isinstance(e, BinOp):
         if e.op == "and":
-            return selectivity(e.left) * selectivity(e.right)
+            return selectivity(e.left, catalog) * selectivity(e.right, catalog)
         if e.op == "or":
-            s1, s2 = selectivity(e.left), selectivity(e.right)
+            s1 = selectivity(e.left, catalog)
+            s2 = selectivity(e.right, catalog)
             return min(1.0, s1 + s2 - s1 * s2)
-        if e.op == "==":
-            return SEL_EQ
-        if e.op == "!=":
-            return 1.0 - SEL_EQ
+        if e.op in ("==", "!="):
+            sel = SEL_EQ
+            if isinstance(e.right, Lit) and isinstance(e.right.value, str):
+                d = _dictionary_of(e.left, catalog)
+                if d is not None and len(d):
+                    sel = strings.eq_selectivity(d, e.right.value)
+            return sel if e.op == "==" else 1.0 - sel
         if e.op in ("<", "<=", ">", ">="):
             return SEL_RANGE
         return SEL_DEFAULT
     if isinstance(e, UnOp) and e.op == "not":
-        return max(0.0, 1.0 - selectivity(e.operand))
+        return max(0.0, 1.0 - selectivity(e.operand, catalog))
     if isinstance(e, Between):
         return SEL_BETWEEN
     if isinstance(e, InList):
-        s = SEL_IN_PER_VALUE * max(len(list(e.values)), 1)
-        s = min(1.0, s)
+        values = list(e.values)
+        d = _dictionary_of(e.operand, catalog)
+        if d is not None and len(d) and all(isinstance(v, str) for v in values):
+            s = strings.in_selectivity(d, values)
+        else:
+            s = min(1.0, SEL_IN_PER_VALUE * max(len(values), 1))
         return 1.0 - s if e.negate else s
     if isinstance(e, Like):
-        return 1.0 - SEL_LIKE if e.negate else SEL_LIKE
+        d = _dictionary_of(e.operand, catalog)
+        s = strings.like_selectivity(d, e.pattern) \
+            if d is not None and len(d) else SEL_LIKE
+        return 1.0 - s if e.negate else s
+    if isinstance(e, StartsWith):
+        d = _dictionary_of(e.operand, catalog)
+        s = strings.prefix_selectivity(d, e.prefix) \
+            if d is not None and len(d) else SEL_LIKE
+        return 1.0 - s if e.negate else s
     if isinstance(e, Lit):
         if isinstance(e.value, bool):
             return 1.0 if e.value else 0.0
@@ -101,10 +138,11 @@ def estimate(rel: Rel, catalog) -> float:
     """Estimated output rows (also memoized onto ``rel.estimated_rows``)."""
     if isinstance(rel, ReadRel):
         base = catalog.row_estimate(rel.table) if catalog is not None else 1e3
-        out = base * (selectivity(rel.filter) if rel.filter is not None
-                      else 1.0)
+        out = base * (selectivity(rel.filter, catalog)
+                      if rel.filter is not None else 1.0)
     elif isinstance(rel, FilterRel):
-        out = estimate(rel.input, catalog) * selectivity(rel.condition)
+        out = estimate(rel.input, catalog) * selectivity(rel.condition,
+                                                       catalog)
     elif isinstance(rel, (ProjectRel, ExchangeRel)):
         out = estimate(rel.input, catalog)
     elif isinstance(rel, SortRel):
@@ -129,12 +167,12 @@ def estimate(rel: Rel, catalog) -> float:
             if rel.how == "left":
                 out = max(out, p)
         if rel.post_filter is not None:
-            out *= selectivity(rel.post_filter)
+            out *= selectivity(rel.post_filter, catalog)
     elif isinstance(rel, AggregateRel):
         child = estimate(rel.input, catalog)
         out = 1.0 if not rel.group_keys else max(1.0, child * 0.1)
         if rel.having is not None:
-            out *= selectivity(rel.having)
+            out *= selectivity(rel.having, catalog)
     else:
         out = 1e3
     rel.estimated_rows = float(out)

@@ -13,12 +13,12 @@ constants at trace time).
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from . import strings
 from .table import BOOL, DATE, NUMERIC, STRING, Column, Table, date_to_days
 
 
@@ -125,8 +125,18 @@ class InList(Expr):
 
 @dataclasses.dataclass(eq=False)
 class Like(Expr):
+    """SQL LIKE: ``%`` any run, ``_`` any char, backslash escapes both."""
     operand: Expr
     pattern: str
+    negate: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class StartsWith(Expr):
+    """Prefix predicate: on a sorted dictionary this is a contiguous code
+    range, so it lowers to two integer compares (no mask gather)."""
+    operand: Expr
+    prefix: str
     negate: bool = False
 
 
@@ -165,7 +175,7 @@ def _collect_columns(e: Expr, out: List[str]) -> None:
     elif isinstance(e, Between):
         for x in (e.operand, e.lo, e.hi):
             _collect_columns(x, out)
-    elif isinstance(e, (InList, Like, ExtractYear, Substr, Cast)):
+    elif isinstance(e, (InList, Like, StartsWith, ExtractYear, Substr, Cast)):
         _collect_columns(e.operand, out)
     elif isinstance(e, Case):
         for c, v in e.whens:
@@ -287,16 +297,9 @@ _CMP = {"==": jnp.equal, "!=": jnp.not_equal, "<": jnp.less,
         "<=": jnp.less_equal, ">": jnp.greater, ">=": jnp.greater_equal}
 
 
-def like_to_regex(pattern: str) -> re.Pattern:
-    out = []
-    for ch in pattern:
-        if ch == "%":
-            out.append(".*")
-        elif ch == "_":
-            out.append(".")
-        else:
-            out.append(re.escape(ch))
-    return re.compile("^" + "".join(out) + "$", re.DOTALL)
+# single LIKE implementation (escape-aware); re-exported here because the
+# fallback oracle and older call sites import it from this module
+like_to_regex = strings.like_to_regex
 
 
 def _string_lit_cmp(col: Column, op: str, lit: str) -> Column:
@@ -398,9 +401,9 @@ def evaluate(expr: Expr, table: Table) -> Column:
     if isinstance(expr, InList):
         v = evaluate(expr.operand, table)
         if v.kind == STRING:
-            d = v.dictionary
-            mask_over_dict = np.isin(d, np.asarray(list(expr.values), dtype=d.dtype))
-            hit = jnp.asarray(mask_over_dict)[v.data]
+            # one-time host pass over the dictionary → cached device code mask
+            hit = strings.in_list_mask(v.dictionary,
+                                       [str(x) for x in expr.values])[v.data]
         else:
             hit = jnp.zeros(v.data.shape, bool)
             for val in expr.values:
@@ -413,11 +416,26 @@ def evaluate(expr: Expr, table: Table) -> Column:
         v = evaluate(expr.operand, table)
         if v.kind != STRING:
             raise ValueError("LIKE on non-string column")
-        rx = like_to_regex(expr.pattern)
-        over_dict = np.fromiter(
-            (rx.match(s) is not None for s in v.dictionary), bool, len(v.dictionary)
-        )
-        hit = jnp.asarray(over_dict)[v.data]
+        kind, lit = strings.analyze_like(expr.pattern)
+        if kind == "prefix":
+            hit = _prefix_hit(v, lit)
+        elif kind == "exact":
+            code = strings.exact_code(v.dictionary, lit)
+            hit = (v.data == code) if code is not None \
+                else jnp.zeros(v.data.shape, bool)
+        else:
+            # general pattern: cached regex pass over the dictionary →
+            # device code mask → per-row gather (fuses into jit regions)
+            hit = strings.like_mask(v.dictionary, expr.pattern)[v.data]
+        if expr.negate:
+            hit = jnp.logical_not(hit)
+        return Column(hit, BOOL)
+
+    if isinstance(expr, StartsWith):
+        v = evaluate(expr.operand, table)
+        if v.kind != STRING:
+            raise ValueError("starts_with on non-string column")
+        hit = _prefix_hit(v, expr.prefix)
         if expr.negate:
             hit = jnp.logical_not(hit)
         return Column(hit, BOOL)
@@ -443,17 +461,27 @@ def evaluate(expr: Expr, table: Table) -> Column:
         v = evaluate(expr.operand, table)
         if v.kind != STRING:
             raise ValueError("substr on non-string")
-        subs = np.asarray(
-            [s[expr.start - 1 : expr.start - 1 + expr.length] for s in v.dictionary]
-        )
-        new_dict, remap = np.unique(subs, return_inverse=True)
-        return Column(jnp.asarray(remap.astype(np.int32))[v.data], STRING, new_dict)
+        # code→code dictionary transform: the derived dictionary object is
+        # identity-stable per (dictionary, start, length), so downstream
+        # plan-signature caches stay valid across repeated executions
+        new_dict, remap = strings.substr_transform(
+            v.dictionary, expr.start, expr.length)
+        return Column(remap[v.data], STRING, new_dict)
 
     if isinstance(expr, Cast):
         v = evaluate(expr.operand, table)
         return Column(v.data.astype(jnp.dtype(expr.dtype)), NUMERIC)
 
     raise TypeError(f"cannot evaluate {type(expr)}")
+
+
+def _prefix_hit(col: Column, prefix: str) -> jnp.ndarray:
+    """Prefix predicate over a dictionary-encoded column: codes are ranks of
+    a sorted dictionary, so the matching codes form [lo, hi)."""
+    lo, hi = strings.prefix_range(col.dictionary, prefix)
+    if lo >= hi:
+        return jnp.zeros(col.data.shape, bool)
+    return (col.data >= lo) & (col.data < hi)
 
 
 def _flip(op: str) -> str:

@@ -1,0 +1,297 @@
+r"""Device-resident string & dictionary subsystem (DESIGN.md "Strings &
+dictionaries").
+
+Strings never exist on the accelerator: a string column is an int32 code
+array on device plus a *sorted* host-side dictionary (codes are ranks, so
+integer order on codes is lexicographic order on strings).  Every string
+operation therefore decomposes into
+
+  1. a **one-time host pass** over the (small) dictionary that produces a
+     device-resident artifact — a boolean *code mask*, a contiguous *code
+     range*, or a code→code *remap* array — and
+  2. a pure ``jnp`` gather/compare over the per-row codes, which fuses into
+     the compiled pipeline regions like any numeric predicate.
+
+This module owns step 1 and memoizes it **by dictionary identity**, which
+matters twice over:
+
+  * the host pass (regex over the dictionary, substring slicing, merge +
+    searchsorted) runs once per (dictionary, operation), not once per
+    query execution;
+  * derived dictionaries (substring transforms, merged join dictionaries)
+    come back as the *same object* every time, so the pipeline compiler's
+    signature cache — which keys on ``id(dictionary)`` — stays hot across
+    repeated queries instead of retracing on every fresh ``np.unique``.
+
+Cached dictionaries are pinned with strong references (they are small: the
+whole point of dictionary encoding is |dict| << |rows|).  ``stats`` counts
+host passes vs cache hits so tests can assert the one-time property.
+
+Deliberate tradeoff: the cache is unbounded.  Eviction cannot preserve the
+identity-stability contract (dropping a derived dictionary and rebuilding
+it later yields a new object, invalidating every downstream id()-keyed
+signature cache), so a long-lived engine serving unbounded *distinct*
+patterns/IN-lists will grow this cache; artifacts are dictionary-sized, so
+growth is O(distinct predicates × |dict|), not O(rows).  ``clear_cache()``
+is the explicit reset for that regime — call it only at a query-cache
+flush boundary, since compiled pipeline regions warmed against the old
+dictionary identities will retrace afterwards.
+
+LIKE pattern language: ``%`` any run, ``_`` any char, backslash escapes
+(``\%``, ``\_``, ``\\``) match the literal character.  Patterns that reduce
+to a pure prefix (``abc%``) or an exact literal skip the regex entirely:
+on a sorted dictionary a prefix match is a contiguous code range, so the
+per-row evaluation is two integer compares with no mask gather at all.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _device_const(host: np.ndarray) -> jnp.ndarray:
+    """Upload a host artifact as a *concrete* device array.
+
+    Cached artifacts outlive any single trace, and the first evaluation of
+    a predicate may happen while a fused pipeline region is being traced —
+    a bare ``jnp.asarray`` there would cache a tracer and leak it into
+    later executions.  ``ensure_compile_time_eval`` escapes the trace, so
+    the cache always holds a reusable concrete constant.
+    """
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(host)
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+# (id(dictionary), op, params) -> artifact; strong refs in _pins keep the
+# dictionary objects alive so an id() can never be recycled onto another
+# dictionary while its cache entries exist.
+_cache: Dict[Tuple, object] = {}
+_pins: Dict[int, np.ndarray] = {}
+
+stats = {"host_passes": 0, "cache_hits": 0}
+
+
+def _cached(dictionary, op: str, params: Tuple, compute):
+    """Memoize ``compute()`` by dictionary identity.
+
+    ``dictionary`` is one np.ndarray or a tuple of them (two-dictionary
+    operations: merge, recode); every participating dictionary is pinned so
+    no id() in the key can be recycled while the entry lives."""
+    dicts = dictionary if isinstance(dictionary, tuple) else (dictionary,)
+    key = (tuple(id(d) for d in dicts), op, params)
+    hit = _cache.get(key)
+    if hit is not None:
+        stats["cache_hits"] += 1
+        return hit
+    stats["host_passes"] += 1
+    for d in dicts:
+        _pins[id(d)] = d
+    out = _cache[key] = compute()
+    return out
+
+
+def clear_cache() -> None:
+    """Drop all memoized artifacts (tests / memory pressure)."""
+    _cache.clear()
+    _pins.clear()
+
+
+# ---------------------------------------------------------------------------
+# LIKE pattern analysis
+# ---------------------------------------------------------------------------
+
+
+def like_to_regex(pattern: str) -> re.Pattern:
+    """SQL LIKE pattern → anchored regex.  Backslash escapes the next char."""
+    out = []
+    i, n = 0, len(pattern)
+    while i < n:
+        ch = pattern[i]
+        if ch == "\\" and i + 1 < n:
+            out.append(re.escape(pattern[i + 1]))
+            i += 2
+            continue
+        if ch == "%":
+            out.append(".*")
+        elif ch == "_":
+            out.append(".")
+        else:
+            out.append(re.escape(ch))
+        i += 1
+    return re.compile("^" + "".join(out) + "$", re.DOTALL)
+
+
+def analyze_like(pattern: str) -> Tuple[str, str]:
+    """Classify a LIKE pattern → ("exact"|"prefix"|"general", literal).
+
+    ``exact``: no unescaped wildcards — equivalent to ``= literal``.
+    ``prefix``: ``literal%`` with no other wildcards — a contiguous code
+    range on the sorted dictionary.  Everything else is ``general``.
+    """
+    lit: List[str] = []
+    i, n = 0, len(pattern)
+    while i < n:
+        ch = pattern[i]
+        if ch == "\\" and i + 1 < n:
+            lit.append(pattern[i + 1])
+            i += 2
+            continue
+        if ch == "%":
+            if i == n - 1:
+                return "prefix", "".join(lit)
+            return "general", ""
+        if ch == "_":
+            return "general", ""
+        lit.append(ch)
+        i += 1
+    return "exact", "".join(lit)
+
+
+# ---------------------------------------------------------------------------
+# code masks / ranges (predicate artifacts)
+# ---------------------------------------------------------------------------
+
+
+def like_host_mask(dictionary: np.ndarray, pattern: str) -> np.ndarray:
+    """Host bool mask over the dictionary: entry matches the LIKE pattern."""
+    def compute():
+        rx = like_to_regex(pattern)
+        return np.fromiter((rx.match(s) is not None for s in dictionary),
+                           bool, len(dictionary))
+    return _cached(dictionary, "like_host", (pattern,), compute)
+
+
+def like_mask(dictionary: np.ndarray, pattern: str) -> jnp.ndarray:
+    """Device bool mask over dictionary codes for a LIKE pattern."""
+    return _cached(dictionary, "like_dev", (pattern,),
+                   lambda: _device_const(like_host_mask(dictionary, pattern)))
+
+
+def in_list_mask(dictionary: np.ndarray, values: Sequence[str]) -> jnp.ndarray:
+    """Device bool mask over dictionary codes for an IN list."""
+    vals = tuple(values)
+
+    def compute():
+        # no dtype cast: forcing the dictionary's fixed U-width would
+        # truncate longer IN values into false-positive matches
+        hit = np.isin(dictionary, np.asarray(list(vals)))
+        return _device_const(hit)
+    return _cached(dictionary, "in_list", (vals,), compute)
+
+
+def prefix_range(dictionary: np.ndarray, prefix: str) -> Tuple[int, int]:
+    """Code range [lo, hi) whose dictionary entries start with ``prefix``.
+
+    The dictionary is sorted, so every string with a given prefix occupies a
+    contiguous rank interval; the per-row predicate is two int compares.
+    """
+    def compute():
+        lo = int(np.searchsorted(dictionary, prefix, side="left"))
+        # prefix matches sort contiguously from lo; count them directly
+        # (a `prefix + <max char>` upper probe would wrongly exclude
+        # entries whose next character is U+10FFFF itself)
+        tail = dictionary[lo:]
+        if len(tail) == 0 or prefix == "":
+            return (lo, len(dictionary))
+        hi = lo + int(np.char.startswith(tail, prefix).sum())
+        return (lo, hi)
+    return _cached(dictionary, "prefix", (prefix,), compute)
+
+
+def exact_code(dictionary: np.ndarray, literal: str) -> Optional[int]:
+    """Code of ``literal`` in the dictionary, or None when absent."""
+    def compute():
+        pos = int(np.searchsorted(dictionary, literal, side="left"))
+        ok = pos < len(dictionary) and dictionary[pos] == literal
+        return (pos if ok else None,)
+    return _cached(dictionary, "exact", (literal,), compute)[0]
+
+
+# ---------------------------------------------------------------------------
+# dictionary transforms (code → code)
+# ---------------------------------------------------------------------------
+
+
+def substr_transform(dictionary: np.ndarray, start: int,
+                     length: int) -> Tuple[np.ndarray, jnp.ndarray]:
+    """SQL substring as a dictionary transform → (derived dict, device remap).
+
+    ``derived dict`` is the sorted unique set of ``s[start-1 : start-1+length]``
+    over the input dictionary; ``remap`` maps old codes to derived codes on
+    device, so ``substring(col)`` is one gather and the result is itself a
+    first-class dictionary-encoded column.  Identity-stable: the same input
+    dictionary always yields the *same* derived dictionary object, keeping
+    plan-signature caches valid across queries.
+    """
+    def compute():
+        subs = np.asarray(
+            [s[start - 1: start - 1 + length] for s in dictionary])
+        derived, remap = np.unique(subs, return_inverse=True)
+        return (derived, _device_const(remap.astype(np.int32)))
+    return _cached(dictionary, "substr", (start, length), compute)
+
+
+def merged_dictionary(left: np.ndarray, right: np.ndarray) -> np.ndarray:
+    """Sorted union of two dictionaries (identity-stable per input pair)."""
+    if left is right:
+        return left
+    return _cached((left, right), "merge", (),
+                   lambda: np.unique(np.concatenate([left, right])))
+
+
+def recode_map(src: np.ndarray, target: np.ndarray) -> jnp.ndarray:
+    """Device int32 map from ``src`` codes to ``target`` codes (-1 = absent)."""
+    def compute():
+        pos = np.searchsorted(target, src)
+        pos = np.clip(pos, 0, max(len(target) - 1, 0))
+        ok = (target[pos] == src) if len(target) else np.zeros(len(src), bool)
+        return _device_const(np.where(ok, pos, -1).astype(np.int32))
+    return _cached((src, target), "recode", (), compute)
+
+
+# ---------------------------------------------------------------------------
+# dictionary-informed selectivity (optimizer stats hooks)
+# ---------------------------------------------------------------------------
+
+
+def like_selectivity(dictionary: np.ndarray, pattern: str) -> float:
+    """Fraction of dictionary entries matching the pattern (hit rate).
+
+    Without per-code frequencies this treats codes as uniform — still far
+    better than a constant for the common cases (rare comment probes, broad
+    ``%a%`` patterns), and exact when the dictionary is value-balanced.
+    """
+    n = len(dictionary)
+    if n == 0:
+        return 0.0
+    return float(like_host_mask(dictionary, pattern).sum()) / n
+
+
+def in_selectivity(dictionary: np.ndarray, values: Sequence[str]) -> float:
+    n = len(dictionary)
+    if n == 0:
+        return 0.0
+    hits = sum(1 for v in values if exact_code(dictionary, str(v)) is not None)
+    return hits / n
+
+
+def prefix_selectivity(dictionary: np.ndarray, prefix: str) -> float:
+    n = len(dictionary)
+    if n == 0:
+        return 0.0
+    lo, hi = prefix_range(dictionary, prefix)
+    return (hi - lo) / n
+
+
+def eq_selectivity(dictionary: np.ndarray, literal: str) -> float:
+    n = len(dictionary)
+    if n == 0:
+        return 0.0
+    return (1.0 if exact_code(dictionary, literal) is not None else 0.0) / n

@@ -126,11 +126,9 @@ class Column:
         """
         if self.kind != STRING:
             raise ValueError("recode_to only applies to string columns")
-        pos = np.searchsorted(target_dictionary, self.dictionary)
-        pos = np.clip(pos, 0, len(target_dictionary) - 1)
-        ok = target_dictionary[pos] == self.dictionary
-        mapping = np.where(ok, pos, -1).astype(np.int32)
-        return Column(jnp.asarray(mapping)[self.data], STRING, target_dictionary)
+        from . import strings
+        mapping = strings.recode_map(self.dictionary, target_dictionary)
+        return Column(mapping[self.data], STRING, target_dictionary)
 
 
 class Table:
@@ -215,8 +213,10 @@ class Table:
         for n in names:
             kind = tables[0][n].kind
             if kind == STRING:
-                # merge dictionaries
-                merged = np.unique(np.concatenate([t[n].dictionary for t in tables]))
+                from . import strings
+                merged = tables[0][n].dictionary
+                for t in tables[1:]:
+                    merged = strings.merged_dictionary(merged, t[n].dictionary)
                 parts = [t[n].recode_to(merged).data for t in tables]
                 out[n] = Column(jnp.concatenate(parts), STRING, merged)
             else:
@@ -243,7 +243,12 @@ class Table:
 
 
 def unify_string_keys(left: Column, right: Column):
-    """Re-encode two string columns into one shared dictionary for joins."""
+    """Re-encode two string columns into one shared dictionary for joins.
+
+    The merged dictionary and both recode maps come from the
+    identity-memoized string subsystem (``relational.strings``), so the
+    host-side merge/searchsorted passes run once per dictionary pair and the
+    merged dictionary object is stable across executions."""
     if left.kind != STRING or right.kind != STRING:
         return left, right
     if left.dictionary is right.dictionary or (
@@ -251,5 +256,6 @@ def unify_string_keys(left: Column, right: Column):
         and np.array_equal(left.dictionary, right.dictionary)
     ):
         return left, right
-    merged = np.unique(np.concatenate([left.dictionary, right.dictionary]))
+    from . import strings
+    merged = strings.merged_dictionary(left.dictionary, right.dictionary)
     return left.recode_to(merged), right.recode_to(merged)

@@ -4,12 +4,29 @@
                                    (repro.optimizer.optimize) ─▶ optimized IR
                                    (engine.execute / FallbackEngine) ─▶ rows
 
-Entry points:
-  * ``sql_to_plan(sql)``            — SQL text → (optimized) plan IR
-  * ``run_sql(sql, db)``            — end-to-end: parse, optimize, execute;
-    ``db`` may be a SiriusEngine, a FallbackEngine, or a host-format
-    ``dict[table] -> dict[col] -> np.ndarray``
-  * ``explain_sql(sql)``            — EXPLAIN output before/after rules
+Supported SQL (the TPC-H + ClickBench surface): SELECT [DISTINCT] with
+joins (comma / INNER JOIN ON / LEFT OUTER JOIN ON), aliased self-joins,
+derived tables in FROM, WHERE / GROUP BY (incl. expression keys) / HAVING /
+ORDER BY / LIMIT, aggregates (sum, avg, min, max, count, count(distinct)),
+subqueries (IN / NOT IN, EXISTS / NOT EXISTS, scalar — correlated scalar
+comparisons are decorrelated DuckDB-style), CASE, CAST, EXTRACT(YEAR),
+date/interval arithmetic, and the string functions LIKE (with backslash
+escapes), substring(col, start, len) and starts_with(col, 'prefix').
+
+Entry points (this module):
+  * ``sql_to_plan(sql, catalog=None, optimize=True)`` — SQL text →
+    (optimized) plan IR; the unit to inspect, serialize, or hand to any
+    engine.
+  * ``run_sql(sql, db, catalog=None, optimize=True)`` — end-to-end
+    execution; ``db`` may be a ``SiriusEngine`` (device ``Table`` result),
+    a ``FallbackEngine``, or a host-format dict-of-dicts.
+  * ``explain_sql(sql, catalog=None)`` — naive and optimized plans side by
+    side with cardinality annotations (the EXPLAIN observability loop).
+
+``Catalog`` supplies table schemas, row estimates and (optionally, via
+``Catalog.with_dictionaries``) string dictionaries for the optimizer's
+dictionary-informed selectivity.  ``DEFAULT_CATALOG`` is TPC-H at SF 1;
+the ClickBench catalog comes from ``repro.data.clickbench``.
 """
 from __future__ import annotations
 
@@ -29,7 +46,23 @@ __all__ = [
 
 def sql_to_plan(sql: str, catalog: Optional[Catalog] = None,
                 optimize: bool = True) -> Rel:
-    """Parse + bind + lower SQL text; optionally run the optimizer rules."""
+    """Parse + bind + lower SQL text to plan IR.
+
+    Args:
+        sql: a single SELECT statement (trailing ``;`` allowed).
+        catalog: table schemas / stats to bind against (default: TPC-H).
+        optimize: run the rule-based optimizer passes; with False the
+            naive lowering is returned (full-width scans, FROM-order join
+            tree, one residual FilterRel) — the optimizer A/B baseline.
+
+    Returns:
+        The root ``Rel`` node; serialize with ``plan_to_json``, inspect
+        with ``explain``, execute with any engine.
+
+    Raises:
+        SqlError: on lexical, syntactic or binding errors, with a caret
+            pointing into the source text where possible.
+    """
     plan = lower_select(parse_sql(sql), catalog or DEFAULT_CATALOG)
     if optimize:
         from ..optimizer import optimize as _optimize
@@ -39,11 +72,21 @@ def sql_to_plan(sql: str, catalog: Optional[Catalog] = None,
 
 def run_sql(sql: str, db, catalog: Optional[Catalog] = None,
             optimize: bool = True):
-    """Execute SQL text against ``db``.
+    """Execute SQL text against ``db`` (parse → optimize → execute).
 
-    ``db`` is a ``SiriusEngine`` (returns a device ``Table``), a
-    ``FallbackEngine``, or a host-format dict-of-dicts (both return the
-    host-table dict format).
+    Args:
+        sql: a single SELECT statement.
+        db: where to run —
+            * ``SiriusEngine``: the accelerated pipeline engine; returns a
+              device ``Table`` (call ``.to_host()`` for numpy columns);
+            * ``FallbackEngine``: the numpy oracle; returns the host-table
+              dict format;
+            * ``dict[table] -> dict[col] -> np.ndarray``: host data,
+              wrapped in a fresh ``FallbackEngine``.
+        catalog: binder/optimizer catalog (default: TPC-H).  Prefer
+            ``SiriusEngine.sql``, which also attaches the loaded tables'
+            dictionaries for dictionary-informed stats.
+        optimize: run the optimizer passes before executing.
     """
     from ..core.fallback import FallbackEngine
 
@@ -54,7 +97,13 @@ def run_sql(sql: str, db, catalog: Optional[Catalog] = None,
 
 
 def explain_sql(sql: str, catalog: Optional[Catalog] = None) -> str:
-    """EXPLAIN: the naive lowered plan and the optimized plan side by side."""
+    """EXPLAIN: the naive lowered plan and the optimized plan side by side.
+
+    Each line is one plan operator with its salient detail (scan filters,
+    join keys and sides, aggregate keys) and, on the optimized plan, the
+    optimizer's ``[~N rows]`` cardinality annotation — the artifact to read
+    when deciding whether pushdown/reordering did what you expected.
+    """
     naive = sql_to_plan(sql, catalog, optimize=False)
     optimized = sql_to_plan(sql, catalog, optimize=True)
     return ("-- naive plan --\n" + explain(naive)

@@ -8,11 +8,16 @@ The binder rewrites parser output in three ways:
     over) a DATE column becomes a DateLit, and ``date '...' ± interval``
     arithmetic is constant-folded to a DateLit — the rewrites DuckDB's
     binder performs before its optimizer runs;
-  * scope bookkeeping: which FROM table provides each column (the lowering
-    pass builds the join graph from this).
+  * scope bookkeeping: which FROM binding provides each column (the
+    lowering pass builds the join graph from this).
 
-TPC-H column names are globally unique, so resolution maps every reference
-to its bare column name; qualifiers are validated, then dropped.
+The plan IR addresses columns purely by name, so every reference resolves
+to a scope-unique **effective name**: the first binding to provide a source
+column name keeps it; later bindings (aliased self-joins like ``nation n1,
+nation n2``, colliding derived-table outputs) have theirs renamed to
+``<binding>__<column>``, and the lowering inserts a renaming projection
+over those scans.  Unqualified references are only valid while unambiguous;
+qualified ones resolve through the binding's alias.
 """
 from __future__ import annotations
 
@@ -24,16 +29,25 @@ from ..relational.expressions import (
 )
 from ..relational.table import DATE, date_to_days
 from .lexer import SqlError
-from .nodes import IntervalLit, SqlCol, TableRef
+from .nodes import IntervalLit, SqlCol
 
 
 class Catalog:
-    """Table schemas (column → kind) + base-cardinality estimates."""
+    """Table schemas (column → kind), base-cardinality estimates, and —
+    when attached — the string columns' dictionaries.
+
+    Dictionaries turn the optimizer's constant string-predicate guesses
+    (``SEL_LIKE`` et al.) into measured hit rates over the actual value
+    domain; see ``repro.optimizer.stats.selectivity``.
+    """
 
     def __init__(self, schema: Dict[str, Dict[str, str]],
-                 rows: Optional[Dict[str, float]] = None):
+                 rows: Optional[Dict[str, float]] = None,
+                 dictionaries: Optional[Dict[str, Dict[str, object]]] = None):
         self.schema = schema
         self.rows = dict(rows or {})
+        # table -> column -> sorted np.ndarray of distinct values
+        self.dictionaries = dict(dictionaries or {})
 
     @staticmethod
     def tpch(scale_factor: float = 1.0) -> "Catalog":
@@ -53,60 +67,130 @@ class Catalog:
     def row_estimate(self, table: str) -> float:
         return float(self.rows.get(table, 1000.0))
 
+    # -- dictionary-informed statistics ------------------------------------
+    def with_dictionaries(self, tables) -> "Catalog":
+        """Copy of this catalog with string dictionaries attached.
+
+        ``tables`` maps table name to either a loaded ``relational.Table``
+        or a plain ``{column: dictionary}`` mapping (what the engine keeps —
+        dictionaries are host-side, so no device table needs pinning)."""
+        dicts: Dict[str, Dict[str, object]] = dict(self.dictionaries)
+        for name, table in tables.items():
+            if not self.has_table(name):
+                continue
+            if hasattr(table, "columns") and not isinstance(table, dict):
+                cols = {c: col.dictionary for c, col in table.columns.items()
+                        if col.dictionary is not None}
+            else:
+                cols = {c: d for c, d in table.items() if d is not None}
+            if cols:
+                dicts[name] = cols
+        return Catalog(self.schema, self.rows, dicts)
+
+    def dictionary_for(self, column: str):
+        """Dictionary of a (globally unique) column name, or None.
+
+        TPC-H and the ClickBench hits table both have globally unique
+        column names, so a flat lookup is unambiguous; renamed self-join
+        columns simply miss and fall back to the constant heuristics.
+        """
+        for cols in self.dictionaries.values():
+            if column in cols:
+                return cols[column]
+        return None
+
 
 DEFAULT_CATALOG = Catalog.tpch()
 
 
-class Scope:
-    """Binding scope: the FROM tables of one SELECT, chained to the parent
-    query's scope for correlated references."""
+class Binding:
+    """One FROM-list entry resolved against the catalog (or a pre-lowered
+    derived table): its source columns, their kinds, and the scope-unique
+    *effective* output names the lowering uses downstream.
 
-    def __init__(self, catalog: Catalog, tables: List[TableRef],
+    Effective names are what make self-joins work on a plan IR that
+    addresses columns purely by name: the first occurrence of a source
+    column name in the scope keeps it, later occurrences (``nation n2``)
+    are renamed to ``<binding>__<column>`` and the lowering inserts a
+    renaming projection over that scan.
+    """
+
+    def __init__(self, name: str, columns: List[str],
+                 kinds: Dict[str, Optional[str]], table: Optional[str] = None,
+                 plan=None):
+        self.name = name              # binding (alias) name
+        self.table = table            # catalog table; None for derived
+        self.columns = list(columns)  # source column names
+        self.kinds = dict(kinds)      # source column -> kind (or None)
+        self.plan = plan              # derived table's lowered sub-plan
+        self.eff: Dict[str, str] = {}  # source column -> effective name
+
+    def eff_columns(self) -> List[str]:
+        return [self.eff[c] for c in self.columns]
+
+    @property
+    def renamed(self) -> bool:
+        return any(self.eff[c] != c for c in self.columns)
+
+
+class Scope:
+    """Binding scope: the FROM entries of one SELECT (base tables, derived
+    tables and left-join tables), chained to the parent query's scope for
+    correlated references.  Resolution returns *effective* column names."""
+
+    def __init__(self, catalog: Catalog, bindings: List[Binding],
                  parent: Optional["Scope"] = None):
         self.catalog = catalog
-        self.tables = tables
+        self.bindings = bindings
         self.parent = parent
-        self.by_alias: Dict[str, str] = {}
-        self.col_table: Dict[str, str] = {}   # column name -> providing table
-        seen_tables = set()
-        for t in tables:
-            if not catalog.has_table(t.name):
-                raise SqlError(f"unknown table {t.name!r}")
-            if t.name in seen_tables:
-                raise SqlError(
-                    f"table {t.name!r} appears twice in FROM; self-joins are "
-                    "not supported by the SQL frontend")
-            seen_tables.add(t.name)
-            if t.binding_name in self.by_alias:
-                raise SqlError(f"duplicate table alias {t.binding_name!r}")
-            self.by_alias[t.binding_name] = t.name
-            for col in catalog.columns(t.name):
-                if col in self.col_table:
-                    raise SqlError(f"ambiguous column {col!r}")
-                self.col_table[col] = t.name
+        self.by_alias: Dict[str, Binding] = {}
+        self.by_source: Dict[str, List[Binding]] = {}
+        self.col_binding: Dict[str, tuple] = {}  # eff -> (binding, src col)
+        for b in bindings:
+            if b.name in self.by_alias:
+                raise SqlError(f"duplicate table alias {b.name!r}")
+            self.by_alias[b.name] = b
+            for col in b.columns:
+                self.by_source.setdefault(col, []).append(b)
+        taken = set()
+        for b in bindings:
+            for col in b.columns:
+                eff = col if col not in taken else f"{b.name}__{col}"
+                if eff in taken:
+                    raise SqlError(
+                        f"cannot disambiguate column {col!r} of {b.name!r}")
+                taken.add(eff)
+                b.eff[col] = eff
+                self.col_binding[eff] = (b, col)
 
     def resolve(self, qualifier: Optional[str], name: str):
-        """→ ("local"|"outer", table, column)."""
+        """→ ("local"|"outer", effective column name)."""
         if qualifier is not None:
-            if qualifier in self.by_alias:
-                table = self.by_alias[qualifier]
-                if name not in self.catalog.schema[table]:
-                    raise SqlError(f"column {name!r} not in table {table!r}")
-                return "local", table, name
+            b = self.by_alias.get(qualifier)
+            if b is not None:
+                if name not in b.eff:
+                    raise SqlError(
+                        f"column {name!r} not in table {qualifier!r}")
+                return "local", b.eff[name]
             if self.parent is not None:
-                kind, table, col = self.parent.resolve(qualifier, name)
-                return "outer", table, col
+                _, eff = self.parent.resolve(qualifier, name)
+                return "outer", eff
             raise SqlError(f"unknown table alias {qualifier!r}")
-        if name in self.col_table:
-            return "local", self.col_table[name], name
+        cands = self.by_source.get(name, [])
+        if len(cands) == 1:
+            return "local", cands[0].eff[name]
+        if len(cands) > 1:
+            raise SqlError(
+                f"ambiguous column {name!r} (qualify it with a table alias)")
         if self.parent is not None:
-            kind, table, col = self.parent.resolve(None, name)
-            return "outer", table, col
+            _, eff = self.parent.resolve(None, name)
+            return "outer", eff
         raise SqlError(f"unknown column {name!r}")
 
     def kind_of(self, name: str) -> Optional[str]:
-        t = self.col_table.get(name)
-        return self.catalog.kind(t, name) if t else None
+        """Kind of an *effective* column name (None when unknown)."""
+        hit = self.col_binding.get(name)
+        return hit[0].kinds.get(hit[1]) if hit else None
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +246,7 @@ def bind_expr(expr: Expr, scope: Scope) -> Expr:
 
     def visit(e: Expr) -> Expr:
         if isinstance(e, SqlCol):
-            where, _table, col = scope.resolve(e.qualifier, e.name)
+            where, col = scope.resolve(e.qualifier, e.name)
             return Col(col) if where == "local" else OuterCol(col)
         if isinstance(e, SqlInSubquery):
             # operand is bound; the subquery select binds during lowering

@@ -13,7 +13,16 @@ Substrait:
   * ``EXISTS (SELECT ...)``   → semi join on the correlated equality keys
     (NOT EXISTS → anti join); only equality correlation is supported,
   * uncorrelated scalar subqueries → ``ScalarSubquery`` nodes, executed
-    first by the engine and bound as literals.
+    first by the engine and bound as literals,
+  * correlated scalar comparisons (``x < (SELECT agg ... WHERE inner =
+    outer)``) → the subquery aggregate grouped by its correlation keys,
+    inner-joined on those keys, comparison kept as a residual predicate.
+
+FROM-clause shapes beyond base tables: derived tables are lowered first
+and bound like base tables; LEFT OUTER JOIN entries keep their ON
+condition at the join (equality keys + build-side predicates), and
+``count(col)`` over a left join's build side lowers to
+``sum(case when __matched ...)``.
 """
 from __future__ import annotations
 
@@ -27,11 +36,13 @@ from ..core.plan import (
 )
 from ..relational.aggregate import AggSpec
 from ..relational.expressions import (
-    BinOp, Col, Expr, and_all, expr_equal, split_conjuncts, transform_expr,
-    walk_expr,
+    Between, BinOp, Case, Cast, Col, Expr, ExtractYear, InList, Like, Lit,
+    StartsWith, Substr, and_all, expr_children, expr_equal, split_conjuncts,
+    transform_expr, walk_expr,
 )
 from ..relational.sort import SortKey
-from .binder import Catalog, DEFAULT_CATALOG, Scope, bind_expr
+from ..relational.table import BOOL, DATE, NUMERIC, STRING
+from .binder import Binding, Catalog, DEFAULT_CATALOG, Scope, bind_expr
 from .lexer import SqlError
 from .nodes import (
     OrderItem, OuterCol, SelectItem, SelectStmt, SqlCol, SqlExists, SqlFunc,
@@ -63,15 +74,45 @@ class _Lowering:
         return f"__{prefix}{next(self._names)}"
 
     # ------------------------------------------------------------------
+    def _make_bindings(self, refs) -> List[Binding]:
+        """Resolve FROM entries: catalog tables → column/kind bindings,
+        derived tables → lowered sub-plans with inferred output kinds."""
+        out: List[Binding] = []
+        for t in refs:
+            if t.subquery is not None:
+                plan, cols, corr, kinds = self.lower(t.subquery)
+                assert not corr
+                out.append(Binding(t.binding_name, cols, kinds, plan=plan))
+                continue
+            if not self.catalog.has_table(t.name):
+                raise SqlError(f"unknown table {t.name!r}")
+            cols = self.catalog.columns(t.name)
+            kinds = {c: self.catalog.kind(t.name, c) for c in cols}
+            out.append(Binding(t.binding_name, cols, kinds, table=t.name))
+        return out
+
+    def _scan_for(self, b: Binding) -> Rel:
+        """A binding's scan: ReadRel / derived sub-plan, plus a renaming
+        projection when the scope assigned non-source effective names."""
+        base: Rel = b.plan if b.plan is not None else ReadRel(b.table)
+        if b.renamed:
+            base = ProjectRel(base, [(b.eff[c], Col(c)) for c in b.columns])
+        return base
+
     def lower(self, stmt: SelectStmt, outer: Optional[Scope] = None,
-              for_exists: bool = False):
-        """→ (plan, output column names, correlations).
+              for_exists: bool = False, corr_group: bool = False):
+        """→ (plan, output column names, correlations, output kinds).
 
         ``correlations`` is a list of (outer_col, inner_col) equality pairs
         extracted from the WHERE clause; non-empty only when ``outer`` is
-        given and the subquery is correlated.
+        given and the subquery is correlated.  With ``corr_group`` (the
+        correlated-scalar-subquery path) the inner correlation columns are
+        injected as leading group keys and output columns, which is the
+        standard aggregate decorrelation DuckDB performs.
         """
-        scope = Scope(self.catalog, stmt.from_tables, parent=outer)
+        bindings = self._make_bindings(stmt.from_tables)
+        left_bindings = self._make_bindings([t for t, _ in stmt.left_joins])
+        scope = Scope(self.catalog, bindings + left_bindings, parent=outer)
 
         where = bind_expr(stmt.where, scope) if stmt.where is not None \
             else None
@@ -80,6 +121,7 @@ class _Lowering:
         correlations: List[Tuple[str, str]] = []
         plain: List[Expr] = []
         sub_joins: List[Expr] = []       # IN/EXISTS subquery conjuncts
+        scalar_cmps: List[Expr] = []     # conjuncts embedding (SELECT ...)
         for c in conjuncts:
             if isinstance(c, (SqlExists, SqlInSubquery)):
                 sub_joins.append(c)
@@ -93,14 +135,38 @@ class _Lowering:
                         "is supported in subqueries")
                 correlations.append(pair)
                 continue
-            plain.append(self._lower_scalar_subqueries(c, scope))
+            if _contains(c, SqlSubquery):
+                scalar_cmps.append(c)
+                continue
+            plain.append(c)
 
         # -- join tree over the FROM tables -----------------------------
-        plan, available = self._join_tree(stmt.from_tables, plain, scope)
+        plan, available = self._join_tree(bindings, plain, scope)
+
+        # -- LEFT JOIN entries (ON conditions stay at the join) ----------
+        if len(stmt.left_joins) > 1:
+            raise SqlError(
+                "at most one LEFT JOIN per SELECT is supported (the "
+                "engine's __matched marker is per-query)")
+        left_info: List[Tuple[str, set]] = []
+        for (tref, on_expr), b in zip(stmt.left_joins, left_bindings):
+            plan, available = self._lower_left_join(
+                plan, available, b, on_expr, scope, left_info)
 
         # -- IN / EXISTS subqueries → semi/anti joins --------------------
         for c in sub_joins:
             plan = self._lower_sub_join(plan, c, scope)
+
+        # -- scalar subquery comparisons: uncorrelated → ScalarSubquery,
+        #    correlated → decorrelating aggregate join ------------------
+        for c in scalar_cmps:
+            plan, rewritten = self._lower_scalar_cmp(plan, available, c,
+                                                     scope)
+            plain.append(rewritten)
+
+        # WHERE predicates over the left join's build side would compare
+        # garbage values on unmatched rows — reject instead of mis-answer
+        self._check_left_guard(plain, left_info)
 
         # -- residual predicates (single FilterRel; optimizer pushes) ----
         residual = and_all(plain)
@@ -108,7 +174,7 @@ class _Lowering:
             plan = FilterRel(plan, residual)
 
         if for_exists:
-            return plan, list(available), correlations
+            return plan, list(available), correlations, {}
 
         # -- select items / aggregation ----------------------------------
         items = self._expand_items(stmt.items, available)
@@ -125,20 +191,44 @@ class _Lowering:
             having = self._subst_aliases(having, alias_map)
             has_agg = True
 
+        if corr_group and correlations:
+            # decorrelation: group by the correlation keys, output them first
+            if not has_agg:
+                raise SqlError(
+                    "correlated scalar subquery must be an aggregate")
+            inner_keys: List[str] = []
+            for _o, i in correlations:
+                if i not in inner_keys:
+                    inner_keys.append(i)
+            group_exprs = [(k, Col(k)) for k in inner_keys] + group_exprs
+            bound_items = [SelectItem(Col(k), k) for k in inner_keys] \
+                + bound_items
+
+        # unmatched left-join rows have no build-side values: only the
+        # count(col)→sum(case __matched) rewrite can consume those columns
+        self._check_left_guard(
+            [it.expr for it in bound_items] + [e for _n, e in group_exprs]
+            + ([having] if having is not None else []), left_info)
+
+        # output kinds (for derived-table bindings in the enclosing scope)
+        out_kinds: Dict[str, Optional[str]] = {}
+
         out_names: List[str] = []
         out_exprs: List[Tuple[str, Expr]] = []
 
         if has_agg:
             plan, key_names, rewrite = self._build_aggregate(
-                plan, group_exprs, bound_items, having, scope)
+                plan, group_exprs, bound_items, having, scope, left_info)
             for i, it in enumerate(bound_items):
                 name = it.alias or self._default_name(it.expr, i)
+                out_kinds[name] = self._expr_kind(it.expr, scope)
                 out_exprs.append((name, rewrite(it.expr)))
                 out_names.append(name)
         else:
             for i, it in enumerate(bound_items):
                 e = self._lower_scalar_subqueries(it.expr, scope)
                 name = it.alias or self._default_name(e, i)
+                out_kinds[name] = self._expr_kind(it.expr, scope)
                 out_exprs.append((name, e))
                 out_names.append(name)
 
@@ -156,7 +246,35 @@ class _Lowering:
         elif stmt.limit is not None:
             plan = FetchRel(plan, stmt.limit)
 
-        return plan, out_names, correlations
+        return plan, out_names, correlations, out_kinds
+
+    # ------------------------------------------------------------------
+    def _expr_kind(self, e: Expr, scope: Scope) -> Optional[str]:
+        """Best-effort output kind of a bound expression (for derived-table
+        column bindings; None = unknown, which only disables the binder's
+        date-literal coercion for that column)."""
+        if isinstance(e, Col):
+            return scope.kind_of(e.name)
+        if isinstance(e, SqlFunc):
+            if e.name in ("min", "max") and e.arg is not None:
+                return self._expr_kind(e.arg, scope)
+            return NUMERIC
+        if isinstance(e, Substr):
+            return STRING
+        if isinstance(e, (ExtractYear, Cast)):
+            return NUMERIC
+        if isinstance(e, Lit):
+            return e.resolved_kind()
+        if isinstance(e, (Between, InList, Like, StartsWith)):
+            return BOOL
+        if isinstance(e, BinOp):
+            if e.op in ("and", "or") or e.op in ("==", "!=", "<", "<=", ">",
+                                                 ">="):
+                return BOOL
+            return NUMERIC
+        if isinstance(e, Case) and e.whens:
+            return self._expr_kind(e.whens[0][1], scope)
+        return None
 
     # ------------------------------------------------------------------
     def _correlation_pair(self, c: Expr) -> Optional[Tuple[str, str]]:
@@ -171,10 +289,11 @@ class _Lowering:
     def _lower_scalar_subqueries(self, e: Expr, scope: Scope) -> Expr:
         def visit(node: Expr) -> Expr:
             if isinstance(node, SqlSubquery):
-                plan, cols, corr = self.lower(node.select, outer=scope)
+                plan, cols, corr, _kinds = self.lower(node.select, outer=scope)
                 if corr:
                     raise SqlError(
-                        "correlated scalar subqueries are not supported")
+                        "correlated scalar subqueries are only supported as "
+                        "the comparison operand of a WHERE conjunct")
                 if len(cols) != 1:
                     raise SqlError(
                         "scalar subquery must produce exactly one column")
@@ -182,18 +301,19 @@ class _Lowering:
             return node
         return transform_expr(e, visit)
 
-    def _join_tree(self, tables, plain: List[Expr], scope: Scope):
-        """Greedy connectivity join over the FROM list.  Consumes the
-        cross-table equality conjuncts from ``plain``."""
-        def table_cols(name: str) -> Set[str]:
-            return set(self.catalog.columns(name))
+    def _join_tree(self, bindings: List[Binding], plain: List[Expr],
+                   scope: Scope):
+        """Greedy connectivity join over the FROM bindings.  Consumes the
+        cross-binding equality conjuncts from ``plain``."""
+        inner_ids = {id(b) for b in bindings}
 
         def is_equi(c: Expr) -> Optional[Tuple[str, str]]:
             if isinstance(c, BinOp) and c.op == "==" \
                     and isinstance(c.left, Col) and isinstance(c.right, Col):
-                lt = scope.col_table.get(c.left.name)
-                rt = scope.col_table.get(c.right.name)
-                if lt and rt and lt != rt:
+                lb = scope.col_binding.get(c.left.name)
+                rb = scope.col_binding.get(c.right.name)
+                if lb and rb and lb[0] is not rb[0] \
+                        and id(lb[0]) in inner_ids and id(rb[0]) in inner_ids:
                     return (c.left.name, c.right.name)
             return None
 
@@ -209,39 +329,170 @@ class _Lowering:
                 rest.append(c)
         plain[:] = rest
 
-        plan: Rel = ReadRel(tables[0].name)
-        available = table_cols(tables[0].name)
-        remaining = list(tables[1:])
+        plan: Rel = self._scan_for(bindings[0])
+        available = set(bindings[0].eff_columns())
+        remaining = list(bindings[1:])
         while remaining:
             picked = None
-            for t in remaining:
-                tcols = table_cols(t.name)
-                keys = [(a, b) if a in available else (b, a)
-                        for _, a, b in equi
-                        if (a in available and b in tcols)
-                        or (b in available and a in tcols)]
+            for b in remaining:
+                tcols = set(b.eff_columns())
+                keys = [(a, bb) if a in available else (bb, a)
+                        for _, a, bb in equi
+                        if (a in available and bb in tcols)
+                        or (bb in available and a in tcols)]
                 if keys:
-                    picked = (t, keys)
+                    picked = (b, keys)
                     break
             if picked is None:
                 raise SqlError(
                     f"disconnected join graph: no equality predicate links "
-                    f"{[t.name for t in remaining]} to the joined tables "
+                    f"{[b.name for b in remaining]} to the joined tables "
                     "(cross joins are not supported)")
-            t, keys = picked
+            b, keys = picked
             probe_keys = [k[0] for k in keys]
             build_keys = [k[1] for k in keys]
-            plan = JoinRel(plan, ReadRel(t.name), probe_keys, build_keys,
+            plan = JoinRel(plan, self._scan_for(b), probe_keys, build_keys,
                            "inner")
-            available |= table_cols(t.name)
-            used = {(a, b) for a, b in zip(probe_keys, build_keys)}
+            available |= set(b.eff_columns())
+            used = {(a, bb) for a, bb in zip(probe_keys, build_keys)}
             equi = [e for e in equi
                     if (e[1], e[2]) not in used and (e[2], e[1]) not in used]
-            remaining.remove(t)
+            remaining = [r for r in remaining if r is not b]
         # equality conjuncts that never linked a new table (both sides were
         # already available) stay as residual filters
         plain.extend(c for c, _a, _b in equi)
         return plan, available
+
+    def _lower_left_join(self, plan: Rel, available: Set[str], b: Binding,
+                         on_expr: Expr, scope: Scope,
+                         left_info: List[Tuple[str, set]]):
+        """LEFT OUTER JOIN lowering.  The ON condition must decompose into
+        cross-side equality keys plus build-side-only predicates (pushed
+        beneath the join, where they are outer-join-safe); the engine's left
+        join marks matched rows with ``__matched``."""
+        bound = bind_expr(on_expr, scope)
+        bcols = set(b.eff_columns())
+        probe_keys: List[str] = []
+        build_keys: List[str] = []
+        build_preds: List[Expr] = []
+        for c in split_conjuncts(bound):
+            if isinstance(c, BinOp) and c.op == "==" \
+                    and isinstance(c.left, Col) and isinstance(c.right, Col):
+                l, r = c.left.name, c.right.name
+                if l in available and r in bcols:
+                    probe_keys.append(l); build_keys.append(r)
+                    continue
+                if r in available and l in bcols:
+                    probe_keys.append(r); build_keys.append(l)
+                    continue
+            cols = set(c.columns())
+            if cols and cols <= bcols and not _contains(c, SqlSubquery):
+                build_preds.append(c)
+                continue
+            raise SqlError(
+                "LEFT JOIN ON supports equality keys plus right-side-only "
+                "predicates")
+        if not probe_keys:
+            raise SqlError("LEFT JOIN requires at least one equality key")
+        scan = self._scan_for(b)
+        if build_preds:
+            scan = FilterRel(scan, and_all(build_preds))
+        plan = JoinRel(plan, scan, probe_keys, build_keys, "left")
+        left_info.append(("__matched", bcols))
+        return plan, available | bcols | {"__matched"}
+
+    def _check_left_guard(self, exprs, left_info) -> None:
+        """Reject references to a LEFT JOIN's build-side columns outside
+        ``count(col)``.  The engine fills unmatched rows' build columns with
+        arbitrary gathered values guarded by ``__matched``; only the
+        count-rewrite consults the guard, so any other use would silently
+        compute over garbage — a SqlError is the honest answer."""
+        if not left_info:
+            return
+        bcols = set()
+        for _mark, bc in left_info:
+            bcols |= bc
+
+        def visit(e: Expr) -> None:
+            if isinstance(e, SqlFunc) and e.name == "count" \
+                    and not e.distinct and isinstance(e.arg, Col) \
+                    and e.arg.name in bcols:
+                return                 # guarded: lowered to sum(case when)
+            if isinstance(e, Col) and e.name in bcols:
+                raise SqlError(
+                    f"column {e.name!r} from a LEFT JOIN's right side can "
+                    "only be used inside count(...) — unmatched rows have "
+                    "no value for it")
+            for child in expr_children(e):
+                visit(child)
+
+        for e in exprs:
+            if e is not None:
+                visit(e)
+
+    def _lower_scalar_cmp(self, plan: Rel, available: Set[str], c: Expr,
+                          scope: Scope):
+        """Lower a WHERE conjunct embedding a scalar subquery.
+
+        Uncorrelated subqueries become ``ScalarSubquery`` literals (executed
+        first by the engine).  A correlated subquery must appear as one side
+        of a comparison; it is decorrelated into an aggregate grouped by its
+        correlation keys, inner-joined on those keys, with the comparison
+        kept as a residual predicate — DuckDB's standard rewrite, and
+        NULL-faithful here because a key with no group simply finds no join
+        partner (sum/avg over the empty set compare as unknown in SQL).
+        """
+        is_cmp = (isinstance(c, BinOp)
+                  and c.op in ("==", "!=", "<", "<=", ">", ">=")
+                  and (isinstance(c.left, SqlSubquery)
+                       ^ isinstance(c.right, SqlSubquery)))
+        if not is_cmp:
+            # any embedded subquery must be uncorrelated here
+            return plan, self._lower_scalar_subqueries(c, scope)
+        sub = c.right if isinstance(c.right, SqlSubquery) else c.left
+        sub_plan, cols, corr, _kinds = self.lower(sub.select, outer=scope,
+                                                  corr_group=True)
+        if not corr:
+            if len(cols) != 1:
+                raise SqlError(
+                    "scalar subquery must produce exactly one column")
+            repl = ScalarSubquery(sub_plan, cols[0])
+        else:
+            inner_keys: List[str] = []
+            key_outer: dict = {}
+            for o, i in corr:
+                if i in key_outer:
+                    if key_outer[i] != o:
+                        raise SqlError(
+                            "conflicting correlation predicates on "
+                            f"column {i!r}")
+                    continue
+                key_outer[i] = o
+                inner_keys.append(i)
+            missing = [key_outer[i] for i in inner_keys
+                       if key_outer[i] not in available]
+            if missing:
+                raise SqlError(
+                    f"correlated columns {missing} are not available in the "
+                    "outer FROM clause")
+            if len(cols) != len(inner_keys) + 1:
+                raise SqlError("correlated scalar subquery must produce "
+                               "exactly one column")
+            tag = self.fresh("sq")
+            renames = [(f"{tag}_k{j}", Col(k))
+                       for j, k in enumerate(inner_keys)]
+            renames.append((f"{tag}_v", Col(cols[len(inner_keys)])))
+            sub_plan = ProjectRel(sub_plan, renames)
+            plan = JoinRel(plan, sub_plan,
+                           [key_outer[i] for i in inner_keys],
+                           [f"{tag}_k{j}" for j in range(len(inner_keys))],
+                           "inner")
+            repl = Col(f"{tag}_v")
+        if isinstance(c.right, SqlSubquery):
+            other = self._lower_scalar_subqueries(c.left, scope)
+            return plan, BinOp(c.op, other, repl)
+        other = self._lower_scalar_subqueries(c.right, scope)
+        return plan, BinOp(c.op, repl, other)
 
     def _lower_sub_join(self, plan: Rel, c: Expr, scope: Scope) -> Rel:
         if isinstance(c, SqlInSubquery):
@@ -249,7 +500,7 @@ class _Lowering:
             if not isinstance(operand, Col):
                 raise SqlError("IN (SELECT ...) requires a plain column on "
                                "the left-hand side")
-            sub_plan, sub_cols, corr = self.lower(c.select, outer=scope)
+            sub_plan, sub_cols, corr, _k = self.lower(c.select, outer=scope)
             if corr:
                 raise SqlError("correlated IN subqueries are not supported")
             if len(sub_cols) != 1:
@@ -257,8 +508,8 @@ class _Lowering:
             how = "anti" if c.negate else "semi"
             return JoinRel(plan, sub_plan, [operand.name], [sub_cols[0]], how)
         assert isinstance(c, SqlExists)
-        sub_plan, _cols, corr = self.lower(c.select, outer=scope,
-                                           for_exists=True)
+        sub_plan, _cols, corr, _k = self.lower(c.select, outer=scope,
+                                               for_exists=True)
         if not corr:
             raise SqlError("EXISTS subquery must be correlated with the "
                            "outer query through an equality predicate")
@@ -272,8 +523,12 @@ class _Lowering:
         out = []
         for it in items:
             if isinstance(it.expr, Star):
-                out.extend(SelectItem(SqlCol(None, c)) for c in
-                           sorted(available))
+                # ``available`` holds *effective* (already-resolved) names —
+                # emit bound Cols directly: re-resolving them as unqualified
+                # SqlCols would fail for renamed self-join columns, and the
+                # internal left-join marker is not a user-visible column
+                out.extend(SelectItem(Col(c)) for c in sorted(available)
+                           if not c.startswith("__"))
             else:
                 out.append(it)
         return out
@@ -316,7 +571,7 @@ class _Lowering:
         return f"col{i}"
 
     def _build_aggregate(self, plan: Rel, group_exprs, bound_items,
-                         having, scope: Scope):
+                         having, scope: Scope, left_info=()):
         """Insert (pre-projection?) + AggregateRel; returns a rewriter that
         maps post-aggregation expressions onto the aggregate's output."""
         # pre-projection for expression-valued group keys
@@ -340,6 +595,14 @@ class _Lowering:
             arg = None
             if fn_node.arg is not None:
                 arg = self._lower_scalar_subqueries(fn_node.arg, scope)
+            if fn == "count" and isinstance(arg, Col):
+                # count(col) over the build side of a LEFT JOIN counts
+                # matches, not rows: rewrite to sum(case when matched)
+                for mark, bcols in left_info:
+                    if arg.name in bcols:
+                        fn = "sum"
+                        arg = Case([(Col(mark), Lit(1))], Lit(0))
+                        break
             for spec in aggs:
                 if spec.fn == fn and expr_equal(spec.expr, arg):
                     return spec.name
@@ -449,6 +712,6 @@ class _Lowering:
 def lower_select(stmt: SelectStmt, catalog: Optional[Catalog] = None) -> Rel:
     """Lower a bound SELECT statement to a (naive, unoptimized) plan."""
     catalog = catalog or DEFAULT_CATALOG
-    plan, _cols, corr = _Lowering(catalog).lower(stmt)
+    plan, _cols, corr, _kinds = _Lowering(catalog).lower(stmt)
     assert not corr
     return plan

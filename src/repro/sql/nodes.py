@@ -83,8 +83,14 @@ class SqlInSubquery(Expr):
 
 @dataclasses.dataclass
 class TableRef:
+    """A FROM-list entry: a base table or a derived table (FROM subquery).
+
+    For a derived table ``name`` equals the (mandatory) alias and
+    ``subquery`` holds the parsed SELECT; the lowering pass lowers it first
+    and binds its output columns like a base table's."""
     name: str
     alias: Optional[str] = None
+    subquery: Optional["SelectStmt"] = None
 
     @property
     def binding_name(self) -> str:
@@ -113,3 +119,6 @@ class SelectStmt:
     order_by: List[OrderItem] = dataclasses.field(default_factory=list)
     limit: Optional[int] = None
     distinct: bool = False
+    # LEFT OUTER JOIN entries: (table, ON condition).  Kept separate from
+    # from_tables because their ON predicates must NOT fold into WHERE.
+    left_joins: List[tuple] = dataclasses.field(default_factory=list)

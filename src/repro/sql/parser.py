@@ -18,7 +18,7 @@ from typing import List, Optional
 
 from ..relational.expressions import (
     Between, BinOp, Case, Cast, DateLit, Expr, ExtractYear, InList, Like, Lit,
-    Substr, UnOp,
+    StartsWith, Substr, UnOp,
 )
 from .lexer import EOF, IDENT, KW, NUM, OP, STR, SqlError, Token, tokenize
 from .nodes import (
@@ -91,7 +91,7 @@ class Parser:
         distinct = self.accept_kw("distinct")
         items = self.parse_items()
         self.expect_kw("from")
-        tables, join_conds = self.parse_tables()
+        tables, join_conds, left_joins = self.parse_tables()
         where = self.parse_expr() if self.accept_kw("where") else None
         for cond in join_conds:       # JOIN ... ON conditions fold into WHERE
             where = cond if where is None else BinOp("and", where, cond)
@@ -114,7 +114,7 @@ class Parser:
                 self.error("LIMIT expects an integer")
             limit = self.advance().value
         return SelectStmt(items, tables, where, group_by, having, order_by,
-                          limit, distinct)
+                          limit, distinct, left_joins)
 
     def parse_items(self) -> List[SelectItem]:
         if self.accept_op("*"):
@@ -134,8 +134,10 @@ class Parser:
         return SelectItem(e, alias)
 
     def parse_tables(self):
+        """→ (tables, inner-join ON conds, [(left-join table, ON cond)])."""
         tables = [self.parse_table_ref()]
         join_conds: List[Expr] = []
+        left_joins = []
         while True:
             if self.accept_op(","):
                 tables.append(self.parse_table_ref())
@@ -143,19 +145,31 @@ class Parser:
             if self.cur.is_kw("join", "inner", "left"):
                 if self.accept_kw("left"):
                     self.accept_kw("outer")
-                    self.error("LEFT OUTER JOIN is not supported by the "
-                               "SQL frontend (use the plan IR directly)")
+                    self.expect_kw("join")
+                    t = self.parse_table_ref()
+                    self.expect_kw("on")
+                    left_joins.append((t, self.parse_expr()))
+                    continue
                 self.accept_kw("inner")
                 self.expect_kw("join")
                 tables.append(self.parse_table_ref())
                 self.expect_kw("on")
                 join_conds.append(self.parse_expr())
                 continue
-            return tables, join_conds
+            return tables, join_conds, left_joins
 
     def parse_table_ref(self) -> TableRef:
         if self.cur.is_op("("):
-            self.error("derived tables (subquery in FROM) are not supported")
+            self.advance()
+            if not self.cur.is_kw("select"):
+                self.error("expected SELECT in derived table")
+            sub = self.parse_select()
+            self.expect_op(")")
+            self.accept_kw("as")
+            if self.cur.kind != IDENT:
+                self.error("derived table requires an alias")
+            alias = self.advance().value
+            return TableRef(alias, alias, subquery=sub)
         name = self.expect_ident()
         alias = None
         if self.accept_kw("as"):
@@ -376,6 +390,26 @@ class Parser:
         return self.advance().value
 
     def parse_func(self, name: str) -> Expr:
+        if name == "starts_with":
+            # starts_with(string_expr, 'prefix'): prefix predicate — lowers
+            # to a contiguous code-range compare on the sorted dictionary
+            self.expect_op("(")
+            e = self.parse_expr()
+            self.expect_op(",")
+            if self.cur.kind != STR:
+                self.error("starts_with expects a string literal prefix")
+            prefix = self.advance().value
+            self.expect_op(")")
+            return StartsWith(e, prefix)
+        if name == "substr":
+            self.expect_op("(")
+            e = self.parse_expr()
+            self.expect_op(",")
+            start = self.parse_int("substr start")
+            self.expect_op(",")
+            length = self.parse_int("substr length")
+            self.expect_op(")")
+            return Substr(e, start, length)
         if name not in AGG_FUNCS:
             self.error(f"unknown function {name!r}")
         self.expect_op("(")

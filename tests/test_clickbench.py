@@ -1,0 +1,95 @@
+"""ClickBench workload: engine-vs-oracle equality + device residency.
+
+The second benchmark of the paper's headline claim.  Every query in the set
+must produce identical results on the jnp pipeline engine and the numpy
+oracle, and the string-predicate queries — the reason this workload exists
+in the repro — must execute with **zero** device→host column transfers
+inside pipeline execution (the string subsystem's host passes touch only
+the small host-side dictionaries, never the device codes).
+"""
+import numpy as np
+import pytest
+
+from repro.core import instrument
+from repro.core.executor import SiriusEngine
+from repro.data import clickbench as cb
+from repro.sql import run_sql
+
+from conftest import USE_KERNELS, assert_tables_equal
+
+N_ROWS = 20_000
+
+
+@pytest.fixture(scope="module")
+def cb_db():
+    return cb.generate(N_ROWS)
+
+
+@pytest.fixture(scope="module")
+def cb_catalog():
+    return cb.clickbench_catalog(N_ROWS)
+
+
+@pytest.fixture(scope="module")
+def cb_engine(cb_db):
+    eng = SiriusEngine(use_kernels=USE_KERNELS)
+    cb.load_into_engine(eng, cb_db)
+    return eng
+
+
+@pytest.mark.parametrize("qid", list(cb.CLICKBENCH_QUERIES))
+def test_engine_matches_oracle(qid, cb_engine, cb_db, cb_catalog):
+    sql = cb.CLICKBENCH_QUERIES[qid]
+    ref = run_sql(sql, cb_db, catalog=cb_catalog)
+    got = cb_engine.sql(sql, catalog=cb_catalog).to_host()
+    assert_tables_equal(got, ref)
+
+
+@pytest.mark.parametrize("qid", cb.CLICKBENCH_STRING_QIDS)
+def test_string_queries_stay_device_resident(qid, cb_engine, cb_catalog):
+    sql = cb.CLICKBENCH_QUERIES[qid]
+    cb_engine.sql(sql, catalog=cb_catalog)        # warm: compile regions
+    with instrument.track_transfers() as counter:
+        cb_engine.sql(sql, catalog=cb_catalog)
+    assert counter.in_pipeline == 0, (
+        f"{qid}: {counter.in_pipeline} device→host column transfers inside "
+        "pipeline execution")
+
+
+def test_workload_shape_is_dictionary_friendly(cb_db):
+    """The property the subsystem exploits: |dictionary| << |rows|."""
+    hits = cb_db["hits"]
+    for col in ("url", "title", "searchphrase", "mobilephonemodel"):
+        n_distinct = len(np.unique(hits[col]))
+        assert n_distinct < len(hits[col]) / 3, col
+
+
+def test_string_filters_return_rows(cb_engine, cb_catalog):
+    """The generated sample must exercise the probes (non-trivial hits)."""
+    for qid in ("q20", "q21", "q22", "q43x"):
+        out = cb_engine.sql(cb.CLICKBENCH_QUERIES[qid], catalog=cb_catalog)
+        host = out.to_host()
+        first = next(iter(host.values()))
+        assert len(first) > 0, qid
+        if qid in ("q20", "q43x"):
+            assert int(host["c"][0]) > 0, qid
+
+
+def test_generator_is_deterministic():
+    a = cb.generate(1000)["hits"]
+    b = cb.generate(1000)["hits"]
+    for k in a:
+        assert (a[k] == b[k]).all(), k
+
+
+def test_catalog_matches_generated_schema(cb_db, cb_catalog):
+    hits = cb_db["hits"]
+    assert set(hits) == set(cb_catalog.columns("hits"))
+    for col, kind in cb.CLICKBENCH_SCHEMA["hits"].items():
+        npkind = hits[col].dtype.kind
+        if kind == "string":
+            assert npkind in "UO", col
+        elif kind == "date":
+            assert npkind == "M", col
+        else:
+            assert npkind in "iuifb", col

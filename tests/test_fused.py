@@ -23,8 +23,11 @@ from repro.data.tpch_queries import QUERIES, SQL_QUERIES
 from conftest import assert_tables_equal
 
 # end-to-end SQL queries exercised for device residency: a group-by scan
-# (Q1), a join-heavy pipeline (Q3) and a filter-dominated scan (Q6)
-RESIDENCY_QIDS = (1, 3, 6)
+# (Q1), a join-heavy pipeline (Q3), a filter-dominated scan (Q6), and the
+# string-heavy trio — LIKE over a left join (Q13), NOT LIKE + IN + anti
+# join (Q16), substring group keys (Q22) — which must run on dictionary
+# code masks without any device→host column transfer
+RESIDENCY_QIDS = (1, 3, 6, 13, 16, 22)
 
 
 @pytest.fixture(scope="module")

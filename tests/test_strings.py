@@ -1,0 +1,276 @@
+"""Device-resident string subsystem: semantics vs an independent oracle.
+
+LIKE / starts_with / substring are evaluated as one-time host passes over
+the sorted dictionary plus device code gathers (DESIGN.md "Strings &
+dictionaries").  These tests pin:
+
+1. **LIKE semantics** against an independent recursive matcher (not the
+   regex translation under test), across wildcard edge cases: ``%a%b%``,
+   escaped ``%``/``_``, the empty pattern, negation, and the prefix/exact
+   fast paths that skip the regex entirely.
+2. **Dictionary-transform identity stability** — the substring transform
+   and merged join dictionaries return the *same object* per input, which
+   is what keeps the pipeline compiler's signature cache warm.
+3. **Dictionary-informed selectivity** — LIKE/IN/prefix estimates come from
+   dictionary hit rates when available and change join orders accordingly
+   (the SEL_LIKE=0.1 constant remains the fallback).
+"""
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+from repro.relational import strings
+from repro.relational.expressions import (
+    Col, InList, Like, StartsWith, Substr, evaluate,
+)
+from repro.relational.table import Table
+
+
+# ---------------------------------------------------------------------------
+# independent LIKE oracle (recursive matcher, no regex)
+# ---------------------------------------------------------------------------
+
+
+def like_match(pattern: str, s: str) -> bool:
+    toks = []
+    i = 0
+    while i < len(pattern):
+        ch = pattern[i]
+        if ch == "\\" and i + 1 < len(pattern):
+            toks.append(("lit", pattern[i + 1]))
+            i += 2
+        elif ch == "%":
+            toks.append(("any", None))
+            i += 1
+        elif ch == "_":
+            toks.append(("one", None))
+            i += 1
+        else:
+            toks.append(("lit", ch))
+            i += 1
+
+    @lru_cache(maxsize=None)
+    def m(ti: int, si: int) -> bool:
+        if ti == len(toks):
+            return si == len(s)
+        kind, v = toks[ti]
+        if kind == "any":
+            return any(m(ti + 1, sj) for sj in range(si, len(s) + 1))
+        if si >= len(s):
+            return False
+        if kind == "one":
+            return m(ti + 1, si + 1)
+        return s[si] == v and m(ti + 1, si + 1)
+
+    return m(0, 0)
+
+
+VALUES = [
+    "", "a", "b", "ab", "ba", "aab", "abb", "abc", "acb", "aXbXc",
+    "a%b", "a_b", "%", "_", "\\", "hello world", "google",
+    "googol", "agoogleb", "https://google.com/x", "http://a.google.b/",
+    "special requests", "handle special any requests carefully",
+]
+
+PATTERNS = [
+    "%a%b%", "a%", "%b", "a_b", "abc", "", "%", "_", "%%",
+    "a\\%b", "\\%%", "a\\_b", "%google%", "a%b%c", "%.google.%",
+    "%special%requests%", "__", "%\\\\%",
+]
+
+
+def _table():
+    return Table.from_pydict({"s": np.array(VALUES)})
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_like_matches_independent_oracle(pattern):
+    t = _table()
+    got = np.asarray(evaluate(Like(Col("s"), pattern), t).data)
+    want = np.array([like_match(pattern, s) for s in VALUES])
+    assert (got == want).all(), f"pattern {pattern!r}: {got} vs {want}"
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_like_negate(pattern):
+    t = _table()
+    pos = np.asarray(evaluate(Like(Col("s"), pattern), t).data)
+    neg = np.asarray(evaluate(Like(Col("s"), pattern, negate=True), t).data)
+    assert (pos ^ neg).all()
+
+
+def test_like_fastpath_classification():
+    assert strings.analyze_like("abc%") == ("prefix", "abc")
+    assert strings.analyze_like("abc") == ("exact", "abc")
+    assert strings.analyze_like("%") == ("prefix", "")
+    assert strings.analyze_like("") == ("exact", "")
+    assert strings.analyze_like("a\\%b") == ("exact", "a%b")
+    # escaped trailing % is a literal, not a prefix marker
+    assert strings.analyze_like("ab\\%") == ("exact", "ab%")
+    assert strings.analyze_like("%a%b%")[0] == "general"
+    assert strings.analyze_like("a_c")[0] == "general"
+    assert strings.analyze_like("a%c")[0] == "general"
+
+
+def test_empty_pattern_matches_only_empty_string():
+    t = _table()
+    got = np.asarray(evaluate(Like(Col("s"), ""), t).data)
+    assert got.sum() == 1 and got[VALUES.index("")]
+
+
+def test_starts_with_matches_python():
+    t = _table()
+    for prefix in ["", "a", "ab", "goog", "https://", "z", "a%"]:
+        got = np.asarray(evaluate(StartsWith(Col("s"), prefix), t).data)
+        want = np.array([s.startswith(prefix) for s in VALUES])
+        assert (got == want).all(), prefix
+        neg = np.asarray(
+            evaluate(StartsWith(Col("s"), prefix, negate=True), t).data)
+        assert (got ^ neg).all()
+
+
+def test_prefix_range_handles_max_codepoint():
+    """Entries whose next character is U+10FFFF must still match the
+    prefix (a `prefix + max-char` upper probe would exclude them)."""
+    vals = ["ab", "abc", "ab\U0010FFFF", "ab\U0010FFFFz", "ac", "b"]
+    t = Table.from_pydict({"s": np.array(vals)})
+    got = np.asarray(evaluate(StartsWith(Col("s"), "ab"), t).data)
+    want = np.array([s.startswith("ab") for s in vals])
+    assert (got == want).all()
+    like = np.asarray(evaluate(Like(Col("s"), "ab%"), t).data)
+    assert (like == want).all()
+
+
+def test_substr_matches_python_slicing():
+    t = _table()
+    for start, length in [(1, 2), (2, 3), (1, 100), (5, 1), (50, 2)]:
+        col = evaluate(Substr(Col("s"), start, length), t)
+        got = col.dictionary[np.asarray(col.data)]
+        want = np.array([s[start - 1: start - 1 + length] for s in VALUES])
+        assert (got == want).all(), (start, length)
+
+
+def test_in_list_values_longer_than_dictionary_width():
+    """IN values wider than the dictionary's U dtype must not be truncated
+    into false positives."""
+    t = Table.from_pydict({"s": np.array(["apple", "pear"])})
+    got = np.asarray(evaluate(InList(Col("s"), ["apple1"]), t).data)
+    assert not got.any()
+    got = np.asarray(evaluate(InList(Col("s"), ["apple1", "pear"]), t).data)
+    assert (got == np.array([False, True])).all()
+
+
+def test_in_list_mask_and_negate():
+    t = _table()
+    vals = ["a", "google", "nope"]
+    got = np.asarray(evaluate(InList(Col("s"), vals), t).data)
+    want = np.array([s in vals for s in VALUES])
+    assert (got == want).all()
+    neg = np.asarray(evaluate(InList(Col("s"), vals, negate=True), t).data)
+    assert (got ^ neg).all()
+
+
+# ---------------------------------------------------------------------------
+# identity-stable dictionary transforms (the plan-signature-cache contract)
+# ---------------------------------------------------------------------------
+
+
+def test_substr_transform_identity_stable():
+    t = _table()
+    a = evaluate(Substr(Col("s"), 1, 2), t)
+    b = evaluate(Substr(Col("s"), 1, 2), t)
+    assert a.dictionary is b.dictionary
+    c = evaluate(Substr(Col("s"), 1, 3), t)
+    assert c.dictionary is not a.dictionary
+
+
+def test_merged_dictionary_identity_stable():
+    d1 = np.unique(np.array(["a", "b", "c"]))
+    d2 = np.unique(np.array(["b", "d"]))
+    m1 = strings.merged_dictionary(d1, d2)
+    m2 = strings.merged_dictionary(d1, d2)
+    assert m1 is m2
+    assert list(m1) == ["a", "b", "c", "d"]
+
+
+def test_host_pass_runs_once_per_dictionary_and_pattern():
+    t = _table()
+    evaluate(Like(Col("s"), "%unique-probe-xyz%"), t)
+    before = dict(strings.stats)
+    for _ in range(5):
+        evaluate(Like(Col("s"), "%unique-probe-xyz%"), t)
+    after = dict(strings.stats)
+    assert after["host_passes"] == before["host_passes"]
+    assert after["cache_hits"] > before["cache_hits"]
+
+
+# ---------------------------------------------------------------------------
+# dictionary-informed selectivity + the join-reorder consequence
+# ---------------------------------------------------------------------------
+
+
+def _stats_catalog(with_dicts: bool):
+    from repro.sql.binder import Catalog
+
+    schema = {
+        "fact": {"f_id": "numeric", "f_d1": "numeric", "f_d2": "numeric"},
+        "dim1": {"d1_id": "numeric", "d1_name": "string"},
+        "dim2": {"d2_id": "numeric", "d2_name": "string"},
+    }
+    rows = {"fact": 10_000.0, "dim1": 500.0, "dim2": 600.0}
+    dicts = None
+    if with_dicts:
+        # every dim1 name contains 'x'; 1% of dim2 names contain 'zq'
+        d1 = np.unique(np.array([f"x{i}" for i in range(100)]))
+        d2 = np.unique(np.array(["zq0"] + [f"y{i}" for i in range(99)]))
+        dicts = {"dim1": {"d1_name": d1}, "dim2": {"d2_name": d2}}
+    return Catalog(schema, rows, dicts)
+
+
+def test_selectivity_uses_dictionary_hit_rate():
+    from repro.optimizer.stats import SEL_LIKE, selectivity
+
+    e = Like(Col("d1_name"), "%x%")
+    assert selectivity(e, None) == SEL_LIKE
+    assert selectivity(e, _stats_catalog(True)) == 1.0
+    rare = Like(Col("d2_name"), "%zq%")
+    assert selectivity(rare, _stats_catalog(True)) == pytest.approx(0.01)
+    # fallback preserved when the catalog has no dictionaries
+    assert selectivity(rare, _stats_catalog(False)) == SEL_LIKE
+
+
+def test_join_reorder_regression_with_dictionary_stats():
+    """With constant stats both dims estimate at 10% of base rows, so the
+    *smaller* dim1 is joined first; dictionary stats reveal dim1's LIKE
+    matches everything and dim2's almost nothing, flipping the order."""
+    from repro.core.plan import JoinRel, ReadRel, walk
+    from repro.sql import sql_to_plan
+
+    sql = ("select count(*) as c from fact, dim1, dim2 "
+           "where f_d1 = d1_id and f_d2 = d2_id "
+           "and d1_name like '%x%' and d2_name like '%zq%'")
+
+    def first_build_table(catalog):
+        plan = sql_to_plan(sql, catalog)
+        joins = [r for r in walk(plan) if isinstance(r, JoinRel)]
+        bottom = [j for j in joins if isinstance(j.probe, ReadRel)
+                  and j.probe.table == "fact"]
+        assert len(bottom) == 1
+        build = bottom[0].build
+        while not isinstance(build, ReadRel):
+            build = build.inputs()[0]
+        return build.table
+
+    assert first_build_table(_stats_catalog(False)) == "dim1"
+    assert first_build_table(_stats_catalog(True)) == "dim2"
+
+
+def test_sql_starts_with_equivalent_to_prefix_like(tpch_db):
+    from repro.sql import run_sql
+
+    a = run_sql("select count(*) as c from part "
+                "where starts_with(p_name, 'gre')", tpch_db)
+    b = run_sql("select count(*) as c from part "
+                "where p_name like 'gre%'", tpch_db)
+    assert int(a["c"][0]) == int(b["c"][0]) > 0
