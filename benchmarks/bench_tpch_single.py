@@ -65,6 +65,14 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
         # use_kernels engine on representative queries when the timed engine
         # doesn't carry a backend (interpret-mode kernels are exact but slow
         # on CPU-only containers, so they are not the timed path here).
+        # hybrid-router view of every query: fraction of plan rels the
+        # device engine owns after capability routing (1.0 = the paper's
+        # fully device-resident happy path; anything lower means host
+        # fragments ran on the fallback oracle)
+        from repro.substrait import HybridRouter
+        router = HybridRouter(eng)
+        frac = {qid: router.device_fragment_fraction(QUERIES[qid]())
+                for qid in sorted(QUERIES)}
         kernel_hits = (eng.backend.hit_counts()
                        if eng.backend is not None else {})
         if eng.backend is None:
@@ -80,7 +88,8 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
             "use_kernels": use_kernels,
             "cold_load_s": round(cold_load_s, 4),
             "queries": {f"q{qid}": {"engine_s": round(t_eng, 6),
-                                    "host_s": round(t_fb, 6)}
+                                    "host_s": round(t_fb, 6),
+                                    "device_fragment_fraction": frac[qid]}
                         for qid, t_eng, t_fb in rows},
             "total_engine_s": round(tot_e, 6),
             "total_host_s": round(tot_f, 6),

@@ -1,0 +1,262 @@
+"""Substrait interchange smoke: the drop-in boundary, proven end to end.
+
+For every workload query this script
+
+  1. produces the wire plan from the SQL frontend (``sql_to_wire``) and
+     checks its canonical bytes against the checked-in golden file
+     (``tests/golden/substrait/``) — the serialization-stability contract;
+  2. re-ingests the wire and asserts structural round-trip exactness
+     (``plan_equal``) plus byte-stable re-emission;
+  3. (unless ``--no-exec``) writes the wire plans and reference result rows
+     to a scratch directory and spawns a **fresh python process** that never
+     sees the SQL text: the child regenerates the deterministic dataset,
+     ingests each wire file, executes it through both engines —
+     ``SiriusEngine.accelerate`` (the drop-in front door) and the numpy
+     ``FallbackEngine`` — and validates row-exact results against the
+     reference.  That is the proof the interface boundary is real, not an
+     in-memory shortcut.
+
+Run:  PYTHONPATH=src python scripts/substrait_smoke.py
+          [--workload tpch|clickbench|all] [--update-golden] [--no-exec] [-v]
+
+``--update-golden`` rewrites the golden wire files from the current
+frontend output (review the diff before committing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "tests", "golden", "substrait")
+TPCH_SF = 0.01
+CLICKBENCH_ROWS = 20_000
+
+
+def _workload_items(workload: str):
+    """Yields (name, sql, catalog_kind) per query."""
+    items = []
+    if workload in ("tpch", "all"):
+        from repro.data.tpch_queries import SQL_QUERIES
+        items += [(f"tpch_q{qid}", SQL_QUERIES[qid], "tpch")
+                  for qid in sorted(SQL_QUERIES)]
+    if workload in ("clickbench", "all"):
+        from repro.data.clickbench import CLICKBENCH_QUERIES
+        items += [(f"clickbench_{qid}", CLICKBENCH_QUERIES[qid], "clickbench")
+                  for qid in sorted(CLICKBENCH_QUERIES)]
+    return items
+
+
+def _catalog(kind: str):
+    if kind == "tpch":
+        from repro.sql.binder import DEFAULT_CATALOG
+        return DEFAULT_CATALOG
+    from repro.data.clickbench import clickbench_catalog
+    return clickbench_catalog()
+
+
+def _host_result_to_jsonable(t: dict) -> dict:
+    import numpy as np
+    out = {}
+    for k, v in t.items():
+        v = np.asarray(v)
+        if v.dtype.kind == "M":
+            out[k] = [str(x) for x in v.astype("datetime64[D]")]
+        elif v.dtype.kind in "UO":
+            out[k] = [str(x) for x in v]
+        elif v.dtype.kind == "f":
+            out[k] = [float(x) for x in v]
+        elif v.dtype.kind == "b":
+            out[k] = [bool(x) for x in v]
+        else:
+            out[k] = [int(x) for x in v]
+    return out
+
+
+def _assert_rows_equal(name: str, got: dict, ref: dict, rtol=1e-6, atol=1e-6):
+    import numpy as np
+    got = _host_result_to_jsonable(got)
+    assert set(got) == set(ref), \
+        f"{name}: columns differ: {sorted(got)} vs {sorted(ref)}"
+    for k in ref:
+        a, b = got[k], ref[k]
+        assert len(a) == len(b), f"{name}.{k}: {len(a)} vs {len(b)} rows"
+        if a and isinstance(b[0], float):
+            np.testing.assert_allclose(np.asarray(a, float),
+                                       np.asarray(b, float),
+                                       rtol=rtol, atol=atol,
+                                       err_msg=f"{name}.{k}")
+        else:
+            assert a == b, f"{name}.{k}: first diff at " \
+                f"{next(i for i, (x, y) in enumerate(zip(a, b)) if x != y)}"
+
+
+# ---------------------------------------------------------------------------
+# parent: golden check + round-trip + scratch emission
+# ---------------------------------------------------------------------------
+
+
+def run_parent(workload: str, update_golden: bool, execute: bool,
+               verbose: bool) -> int:
+    from repro.core.plan import plan_equal
+    from repro.sql import sql_to_plan, sql_to_wire
+    from repro.substrait import ingest, wire_bytes
+
+    failures = 0
+    wires = {}
+    for name, sql, kind in _workload_items(workload):
+        cat = _catalog(kind)
+        try:
+            wire = sql_to_wire(sql, cat)
+            blob = wire_bytes(wire)
+            golden_path = os.path.join(GOLDEN_DIR, f"{name}.json")
+            if update_golden:
+                os.makedirs(GOLDEN_DIR, exist_ok=True)
+                with open(golden_path, "wb") as f:
+                    f.write(blob)
+                status = "golden updated"
+            else:
+                with open(golden_path, "rb") as f:
+                    golden = f.read()
+                assert blob == golden, \
+                    "wire bytes drifted from checked-in golden file " \
+                    f"({golden_path}); run --update-golden and review"
+                status = "golden ok"
+            restored = ingest(wire)
+            assert plan_equal(restored, sql_to_plan(sql, cat)), \
+                "ingest(emit(plan)) is not structurally equal to plan"
+            assert wire_bytes(sql_to_wire(sql, cat)) == blob, \
+                "re-emission is not byte-stable"
+            wires[name] = (blob, sql, kind)
+            print(f"{name:>16}: {status}, round-trip exact, "
+                  f"{len(blob)} canonical bytes")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name:>16}: FAIL — {type(e).__name__}: {e}")
+    total = len(_workload_items(workload))
+    print(f"{total - failures}/{total} wire plans round-trip "
+          "emit->ingest->emit byte-stable\n")
+    if failures or not execute:
+        return failures
+
+    # -- cross-process execution proof ------------------------------------
+    with tempfile.TemporaryDirectory(prefix="substrait_smoke_") as scratch:
+        manifest = {"tpch_sf": TPCH_SF, "clickbench_rows": CLICKBENCH_ROWS,
+                    "queries": []}
+        from repro.core.fallback import FallbackEngine
+        dbs = {}
+        for name, (blob, sql, kind) in wires.items():
+            if kind not in dbs:
+                dbs[kind] = _generate_db(kind)
+            ref = FallbackEngine(dbs[kind]).execute(
+                sql_to_plan(sql, _catalog(kind)))
+            wire_file = os.path.join(scratch, f"{name}.wire.json")
+            ref_file = os.path.join(scratch, f"{name}.ref.json")
+            with open(wire_file, "wb") as f:
+                f.write(blob)
+            with open(ref_file, "w") as f:
+                json.dump(_host_result_to_jsonable(ref), f)
+            manifest["queries"].append(
+                {"name": name, "workload": kind,
+                 "wire": wire_file, "ref": ref_file})
+        with open(os.path.join(scratch, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        print(f"spawning fresh consumer process over {len(wires)} wire "
+              "plans (no SQL crosses the boundary) ...")
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--child",
+             os.path.join(scratch, "manifest.json")] + (["-v"] if verbose else []),
+            env=dict(os.environ,
+                     PYTHONPATH=os.pathsep.join(
+                         p for p in ("src", os.environ.get("PYTHONPATH", ""))
+                         if p)),
+            cwd=os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             os.pardir))
+        if proc.returncode != 0:
+            print("consumer process FAILED")
+            return 1
+    return 0
+
+
+def _generate_db(kind: str):
+    if kind == "tpch":
+        from repro.data.tpch import generate
+        return generate(TPCH_SF)
+    from repro.data.clickbench import generate
+    return generate(CLICKBENCH_ROWS)
+
+
+# ---------------------------------------------------------------------------
+# child: the consumer on the far side of the process boundary
+# ---------------------------------------------------------------------------
+
+
+def run_child(manifest_path: str, verbose: bool) -> int:
+    from repro.core.fallback import FallbackEngine
+    from repro.core.executor import SiriusEngine
+    from repro.substrait import ingest
+
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    engines = {}
+    failures = 0
+    for q in manifest["queries"]:
+        name, kind = q["name"], q["workload"]
+        if kind not in engines:
+            db = _generate_db(kind)
+            eng = SiriusEngine()
+            if kind == "tpch":
+                from repro.data.tpch import load_into_engine
+            else:
+                from repro.data.clickbench import load_into_engine
+            load_into_engine(eng, db)
+            engines[kind] = (eng, db)
+        eng, db = engines[kind]
+        try:
+            with open(q["wire"], "rb") as f:
+                blob = f.read()
+            with open(q["ref"]) as f:
+                ref = json.load(f)
+            plan = ingest(blob)
+            host_res = FallbackEngine(db).execute(plan)
+            _assert_rows_equal(name + "[oracle]", host_res, ref)
+            acc = eng.accelerate(blob)
+            report = eng.last_accelerate_report
+            assert report["device_rel_fraction"] == 1.0, \
+                f"expected a fully device-resident plan, got {report}"
+            _assert_rows_equal(name + "[engine]", acc.to_host(), ref)
+            print(f"{name:>16}: ingested + executed row-exact on both "
+                  f"engines ({report['device_fragments']} device fragment)")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name:>16}: FAIL — {type(e).__name__}: {e}")
+    total = len(manifest["queries"])
+    print(f"{total - failures}/{total} ingested wire plans row-exact "
+          "on SiriusEngine.accelerate and the numpy oracle")
+    return failures
+
+
+def main(argv) -> int:
+    if "--child" in argv:
+        i = argv.index("--child")
+        return 1 if run_child(argv[i + 1], "-v" in argv) else 0
+    workload = "all"
+    if "--workload" in argv:
+        i = argv.index("--workload")
+        if i + 1 >= len(argv):
+            print("--workload requires a value: tpch|clickbench|all")
+            return 2
+        workload = argv[i + 1]
+    if workload not in ("tpch", "clickbench", "all"):
+        print(f"unknown workload {workload!r}: expected tpch|clickbench|all")
+        return 2
+    failures = run_parent(workload, "--update-golden" in argv,
+                          "--no-exec" not in argv, "-v" in argv)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -521,6 +521,8 @@ class SiriusEngine:
                                          backend, profile=profile,
                                          compile_pipelines=compile_pipelines)
         self.host_tables: Dict[str, dict] = {}
+        # routing report of the most recent ``accelerate`` call
+        self.last_accelerate_report: Optional[dict] = None
         # host-side string dictionaries harvested at registration — kept
         # instead of the Tables themselves so the buffer manager stays free
         # to spill device columns (a pinned Table would defeat eviction)
@@ -559,6 +561,34 @@ class SiriusEngine:
         cat = (catalog or DEFAULT_CATALOG).with_dictionaries(
             self.table_dictionaries)
         return run_sql(text, self, catalog=cat, optimize=optimize)
+
+    def accelerate(self, wire_plan, registry=None):
+        """The drop-in front door: execute a serialized Substrait-style plan.
+
+        ``wire_plan`` is what an external host engine hands over — the wire
+        dict produced by ``repro.substrait.emit`` (or its JSON text/bytes).
+        The plan is ingested, split by the capability ``registry`` into
+        maximal device fragments and host fragments (executed on the numpy
+        fallback oracle), and run with boundary transfers accounted through
+        the buffer manager.  Unsupported rels degrade to hybrid execution
+        instead of raising — Sirius's fallback contract.
+
+        Returns a device ``Table``; the routing report (fragment placements,
+        boundary bytes, ``device_rel_fraction``) is kept on
+        ``self.last_accelerate_report``.
+        """
+        from ..relational.table import Table as _Table
+        from ..substrait import HybridRouter, ingest
+
+        plan = ingest(wire_plan)
+        result, report = HybridRouter(self, registry).execute(plan)
+        if not isinstance(result, _Table):
+            # host-rooted plan: the result itself crosses back to device
+            result = _Table.from_pydict(result)
+            self.buffers.account_boundary_to_device(result.nbytes)
+            report["boundary_to_device_bytes"] += result.nbytes
+        self.last_accelerate_report = report
+        return result
 
     def execute_with_fallback(self, plan: Rel):
         """Run on the accelerator engine; on failure, degrade to the host path."""

@@ -26,7 +26,7 @@ from ..relational.expressions import (
 from ..relational.table import DATE, STRING
 from .plan import (
     AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
-    ReadRel, Rel, ScalarSubquery, SortRel,
+    ReadRel, Rel, ScalarSubquery, SetRel, SortRel, WindowRel,
 )
 
 _EPOCH = np.datetime64("1970-01-01", "D")
@@ -254,6 +254,90 @@ def np_group_aggregate(t: HostTable, keys: Sequence[str], aggs: Sequence[AggSpec
     return out
 
 
+def _sortable(a: np.ndarray, ascending: bool = True) -> np.ndarray:
+    """Lexsort-ready int/float view of a column (strings → ranks)."""
+    if a.dtype.kind in "UO":
+        _, inv = np.unique(np.asarray(a, "U"), return_inverse=True)
+        a = inv.astype(np.int64)
+    if a.dtype.kind == "M":
+        a = a.astype(np.int64)
+    if a.dtype.kind == "b":
+        a = a.astype(np.int8)
+    if not ascending:
+        a = -a.astype(np.float64) if a.dtype.kind == "f" else -a.astype(np.int64)
+    return a
+
+
+def np_window(t: HostTable, partition_keys: Sequence[str],
+              order_keys, func: str, arg, name: str) -> HostTable:
+    """WindowRel semantics: rank rows / broadcast partition aggregates."""
+    n = _num_rows(t)
+    if partition_keys:
+        packed = np.zeros(n, np.int64)
+        for k in partition_keys:
+            c = _sortable(t[k])
+            c = c - c.min(initial=0)
+            card = int(c.max(initial=0)) + 1
+            _, packed = np.unique(packed, return_inverse=True)
+            packed = packed.astype(np.int64) * card + c.astype(np.int64)
+        _, gids = np.unique(packed, return_inverse=True)
+    else:
+        gids = np.zeros(n, np.int64)
+    ngroups = int(gids.max(initial=0)) + 1 if n else 0
+    out = dict(t)
+    if func in ("row_number", "rank"):
+        arrays = [_sortable(t[k.name], k.ascending) for k in order_keys]
+        order = np.lexsort(tuple(reversed(arrays)) + (gids,))
+        gsorted = gids[order]
+        starts = np.r_[0, np.nonzero(np.diff(gsorted))[0] + 1] \
+            if n else np.zeros(0, np.int64)
+        group_start = np.zeros(ngroups, np.int64)
+        if n:
+            group_start[gsorted[starts]] = starts
+        pos = np.arange(n) - group_start[gsorted]
+        rn = np.empty(n, np.int64)
+        rn[order] = pos + 1
+        if func == "rank" and arrays:
+            # rank: ties (equal order keys within a partition) share the
+            # lowest row_number of their run
+            key = np.stack([a[order] for a in arrays] + [gsorted])
+            new_run = np.r_[True, (np.diff(key) != 0).any(axis=0)] if n \
+                else np.zeros(0, bool)
+            run_first = np.maximum.accumulate(
+                np.where(new_run, np.arange(n), 0))
+            rr = np.empty(n, np.int64)
+            rr[order] = run_first - group_start[gsorted] + 1
+            rn = rr
+        out[name] = rn
+        return out
+    if func != "count" and arg is None:
+        raise ValueError(f"window aggregate {func!r} requires an argument "
+                         "column")
+    v = t[arg].astype(np.float64) if func != "count" else None
+    counts = np.zeros(ngroups, np.int64)
+    np.add.at(counts, gids, 1)
+    if func == "count":
+        out[name] = counts[gids]
+    elif func == "sum":
+        acc = np.zeros(ngroups, np.float64)
+        np.add.at(acc, gids, v)
+        res = acc[gids]
+        out[name] = res if t[arg].dtype.kind == "f" else res.astype(np.int64)
+    elif func == "avg":
+        acc = np.zeros(ngroups, np.float64)
+        np.add.at(acc, gids, v)
+        out[name] = (acc / np.maximum(counts, 1))[gids]
+    elif func in ("min", "max"):
+        ufunc = np.minimum if func == "min" else np.maximum
+        acc = np.full(ngroups, np.inf if func == "min" else -np.inf)
+        ufunc.at(acc, gids, v)
+        res = acc[gids]
+        out[name] = res if t[arg].dtype.kind == "f" else res.astype(np.int64)
+    else:
+        raise ValueError(f"unknown window function {func!r}")
+    return out
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -320,4 +404,17 @@ class FallbackEngine:
         if isinstance(plan, FetchRel):
             t = self.execute(plan.input)
             return _take(t, np.arange(min(plan.count, _num_rows(t))))
+        if isinstance(plan, SetRel):
+            if plan.op != "union_all":
+                raise ValueError(f"unsupported set op {plan.op!r}")
+            if not plan.operands:
+                raise ValueError("SetRel requires at least one operand")
+            parts = [self.execute(p) for p in plan.operands]
+            cols = list(parts[0])
+            return {k: np.concatenate([np.asarray(p[k]) for p in parts])
+                    for k in cols}
+        if isinstance(plan, WindowRel):
+            t = self.execute(plan.input)
+            return np_window(t, plan.partition_keys, plan.order_keys,
+                             plan.func, plan.arg, plan.name)
         raise TypeError(type(plan))

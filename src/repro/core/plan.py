@@ -34,6 +34,11 @@ from ..relational.expressions import (
 from ..relational.sort import SortKey
 
 
+# Leaf tables with this name prefix are hybrid-router cut points: the scan
+# reads a materialized fragment result, not a base table (substrait.router).
+HYBRID_BOUNDARY_PREFIX = "__substrait_frag"
+
+
 class Rel:
     """Base class for plan nodes."""
 
@@ -47,6 +52,8 @@ class Rel:
             v = getattr(self, f.name)
             if isinstance(v, Rel):
                 out.append(v)
+            elif isinstance(v, list):
+                out.extend(x for x in v if isinstance(x, Rel))
         return out
 
 
@@ -112,6 +119,33 @@ class ExchangeRel(Rel):
 
 
 @dataclasses.dataclass
+class SetRel(Rel):
+    """Set operation (UNION ALL).  Part of the interchange vocabulary but not
+    of the device pipeline engine — the capability registry routes it to the
+    host fallback, exercising Sirius's hybrid-degradation contract."""
+    operands: List[Rel]
+    op: str = "union_all"
+
+
+@dataclasses.dataclass
+class WindowRel(Rel):
+    """Window function over partitions (no frame clause).
+
+    ``row_number``/``rank`` rank rows within a partition by ``order_keys``;
+    aggregate functions (sum/count/avg/min/max over ``arg``) broadcast the
+    partition-wide value to every row.  Like SetRel, this rel is known to the
+    wire format but unsupported on the device engine: ingesting a plan that
+    contains one degrades to hybrid execution instead of raising.
+    """
+    input: Rel
+    partition_keys: List[str]
+    order_keys: List[SortKey]
+    func: str                                     # row_number|rank|sum|count|avg|min|max
+    arg: Optional[str] = None                     # input column (aggregates)
+    name: str = "__window"
+
+
+@dataclasses.dataclass
 class ScalarSubquery(Expr):
     """Uncorrelated scalar subquery — executed first, bound as a literal.
 
@@ -134,7 +168,7 @@ _EXPR_TYPES = {c.__name__: c for c in
                 Case, ExtractYear, Substr, Cast)}
 _REL_TYPES = {c.__name__: c for c in
               (ReadRel, FilterRel, ProjectRel, JoinRel, AggregateRel, SortRel,
-               FetchRel, ExchangeRel)}
+               FetchRel, ExchangeRel, SetRel, WindowRel)}
 
 
 def _enc(obj: Any) -> Any:
@@ -202,6 +236,39 @@ def walk(plan: Rel):
         yield from walk(child)
 
 
+def rel_exprs(rel: Rel) -> List[Expr]:
+    """All Expr objects directly attached to ``rel`` (scan filters, join
+    residuals, projection expressions, aggregate measures, having...)."""
+    out: List[Expr] = []
+    for f in dataclasses.fields(rel):
+        v = getattr(rel, f.name)
+        if isinstance(v, Expr):
+            out.append(v)
+        elif isinstance(v, list):
+            for item in v:
+                if isinstance(item, Expr):
+                    out.append(item)
+                elif isinstance(item, tuple):
+                    out.extend(x for x in item if isinstance(x, Expr))
+                elif isinstance(item, AggSpec) and isinstance(item.expr, Expr):
+                    out.append(item.expr)
+    return out
+
+
+def walk_deep(plan: Rel):
+    """Pre-order traversal that also descends into scalar-subquery sub-plans
+    (``walk`` stays expression-blind; capability analysis must not)."""
+    from ..relational.expressions import walk_expr
+
+    yield plan
+    for e in rel_exprs(plan):
+        for node in walk_expr(e):
+            if isinstance(node, ScalarSubquery):
+                yield from walk_deep(node.plan)
+    for child in plan.inputs():
+        yield from walk_deep(child)
+
+
 def _expr_str(e: Expr) -> str:
     """Compact expression rendering: scalar-subquery sub-plans are elided so
     EXPLAIN lines stay one plan node per line."""
@@ -221,6 +288,8 @@ def explain(plan: Rel, indent: int = 0) -> str:
     extra = ""
     if isinstance(plan, ReadRel):
         extra = f" {plan.table}"
+        if plan.table.startswith(HYBRID_BOUNDARY_PREFIX):
+            extra += "  [hybrid boundary]"
         if plan.columns:
             extra += f" cols={plan.columns}"
         if plan.filter is not None:
@@ -244,6 +313,18 @@ def explain(plan: Rel, indent: int = 0) -> str:
             extra += f" limit={plan.limit}"
     elif isinstance(plan, ExchangeRel):
         extra = f" {plan.kind} keys={plan.keys}"
+    elif isinstance(plan, SetRel):
+        extra = f" {plan.op} over {len(plan.operands)} inputs"
+    elif isinstance(plan, WindowRel):
+        extra = f" {plan.func}"
+        if plan.arg:
+            extra += f"({plan.arg})"
+        extra += f" partition by {plan.partition_keys}"
+        if plan.order_keys:
+            extra += " order by " + ", ".join(
+                k.name + ("" if k.ascending else " desc")
+                for k in plan.order_keys)
+        extra += f" as {plan.name}"
     if plan.estimated_rows is not None:
         extra += f"  [~{plan.estimated_rows:,.0f} rows]"
     lines = [f"{pad}{name}{extra}"]

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional
 
 from ..core.plan import (
     AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
-    ReadRel, Rel, ScalarSubquery, SortRel,
+    ReadRel, Rel, ScalarSubquery, SetRel, SortRel, WindowRel,
 )
 from ..relational import strings
 from ..relational.expressions import (
@@ -131,6 +131,10 @@ def rel_columns(rel: Rel, catalog) -> List[str]:
         return out
     if isinstance(rel, AggregateRel):
         return list(rel.group_keys) + [a.name for a in rel.aggs]
+    if isinstance(rel, WindowRel):
+        return rel_columns(rel.input, catalog) + [rel.name]
+    if isinstance(rel, SetRel):
+        return rel_columns(rel.operands[0], catalog) if rel.operands else []
     raise TypeError(type(rel))
 
 
@@ -173,6 +177,10 @@ def estimate(rel: Rel, catalog) -> float:
         out = 1.0 if not rel.group_keys else max(1.0, child * 0.1)
         if rel.having is not None:
             out *= selectivity(rel.having, catalog)
+    elif isinstance(rel, WindowRel):
+        out = estimate(rel.input, catalog)
+    elif isinstance(rel, SetRel):
+        out = sum(estimate(p, catalog) for p in rel.operands)
     else:
         out = 1e3
     rel.estimated_rows = float(out)

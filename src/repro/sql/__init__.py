@@ -40,7 +40,7 @@ from .parser import parse_sql
 
 __all__ = [
     "Catalog", "SqlError", "explain_sql", "parse_sql", "run_sql",
-    "sql_to_plan", "tokenize",
+    "sql_to_plan", "sql_to_wire", "tokenize",
 ]
 
 
@@ -68,6 +68,23 @@ def sql_to_plan(sql: str, catalog: Optional[Catalog] = None,
         from ..optimizer import optimize as _optimize
         plan = _optimize(plan, catalog or DEFAULT_CATALOG)
     return plan
+
+
+def sql_to_wire(sql: str, catalog: Optional[Catalog] = None,
+                optimize: bool = True) -> dict:
+    """SQL text → Substrait-style wire plan (the host-database producer).
+
+    This is the full drop-in pipeline of the paper's host side: parse,
+    bind, lower, optimize, then serialize through ``repro.substrait.emit``
+    so the plan can cross a process/system boundary and be handed to
+    ``SiriusEngine.accelerate`` (or any other consumer).  Serialize the
+    returned dict canonically with ``repro.substrait.wire_bytes``.
+    """
+    from ..substrait import emit
+    from .binder import DEFAULT_CATALOG
+
+    cat = catalog or DEFAULT_CATALOG
+    return emit(sql_to_plan(sql, cat, optimize), cat)
 
 
 def run_sql(sql: str, db, catalog: Optional[Catalog] = None,

@@ -1,0 +1,529 @@
+"""Substrait-style interchange + hybrid drop-in acceleration layer.
+
+Four contracts under test (ISSUE 5 / DESIGN.md §11):
+
+* **serialization stability** — every TPC-H + ClickBench plan emits byte-
+  identical wire against the checked-in golden files, round-trips
+  emit→ingest structurally exact (``plan_equal``), and re-emits byte-stable;
+* **actionable rejection** — mutated wire (unknown rel types, undeclared /
+  unregistered function URIs, missing fields, version skew) fails with a
+  ``SubstraitError`` carrying a document path, never a ``KeyError``;
+* **hybrid routing** — fully supported plans form exactly one device
+  fragment with zero in-fragment host transfers and zero boundary bytes;
+  plans containing unsupported rels (WindowRel, SetRel) or capability-
+  subtracted expressions degrade to hybrid execution on the fallback
+  oracle with boundary transfers accounted, instead of raising;
+* **the drop-in front door** — ``SiriusEngine.accelerate(wire)`` executes
+  ingested plans row-exact against the SQL path on both engines.
+"""
+import copy
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import instrument
+from repro.core.executor import SiriusEngine
+from repro.core.fallback import FallbackEngine
+from repro.core.plan import (
+    AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
+    ReadRel, ScalarSubquery, SetRel, SortRel, WindowRel, explain, plan_equal,
+    plan_from_json, plan_to_json, walk_deep,
+)
+from repro.data.tpch_queries import SQL_QUERIES
+from repro.relational.aggregate import AggSpec
+from repro.relational.expressions import (
+    Between, BinOp, Case, Cast, Col, DateLit, ExtractYear, InList, Like, Lit,
+    StartsWith, Substr, UnOp,
+)
+from repro.relational.sort import SortKey
+from repro.sql import run_sql, sql_to_plan, sql_to_wire
+from repro.sql.binder import DEFAULT_CATALOG
+from repro.substrait import (
+    CapabilityRegistry, HybridRouter, SubstraitError, emit,
+    explain_fragments, ingest, wire_bytes,
+)
+
+from conftest import assert_tables_equal
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden", "substrait")
+
+
+def _golden(name: str) -> bytes:
+    with open(os.path.join(GOLDEN_DIR, f"{name}.json"), "rb") as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# serialization stability (golden wire files)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qid", sorted(SQL_QUERIES))
+def test_tpch_wire_golden_and_roundtrip(qid):
+    plan = sql_to_plan(SQL_QUERIES[qid])
+    wire = emit(plan, DEFAULT_CATALOG)
+    blob = wire_bytes(wire)
+    assert blob == _golden(f"tpch_q{qid}"), (
+        f"q{qid}: emitted wire drifted from the golden file; if the change "
+        "is intentional run scripts/substrait_smoke.py --update-golden")
+    restored = ingest(wire)
+    assert plan_equal(restored, plan), f"q{qid}: round-trip not exact"
+    assert wire_bytes(emit(restored, DEFAULT_CATALOG)) == blob, (
+        f"q{qid}: re-emission not byte-stable")
+
+
+def test_clickbench_wire_golden_and_roundtrip():
+    from repro.data.clickbench import CLICKBENCH_QUERIES, clickbench_catalog
+    cat = clickbench_catalog()
+    for qid in sorted(CLICKBENCH_QUERIES):
+        plan = sql_to_plan(CLICKBENCH_QUERIES[qid], cat)
+        wire = emit(plan, cat)
+        blob = wire_bytes(wire)
+        assert blob == _golden(f"clickbench_{qid}"), f"{qid}: wire drifted"
+        restored = ingest(wire)
+        assert plan_equal(restored, plan), f"{qid}: round-trip not exact"
+        assert wire_bytes(emit(restored, cat)) == blob, qid
+
+
+def test_wire_carries_version_extensions_and_schemas():
+    wire = sql_to_wire(SQL_QUERIES[6])
+    assert wire["version"]["majorNumber"] == 0
+    assert wire["version"]["producer"].startswith("repro-substrait")
+    names = [e["extensionFunction"]["name"] for e in wire["extensions"]]
+    assert "between" in names and "and" in names and "sum" in names
+    uris = {u["uri"] for u in wire["extensionUris"]}
+    assert all(u.startswith("https://github.com/substrait-io/") for u in uris)
+    # schema block: dtype + dictionary kinds for every scanned base table
+    li = wire["schemas"]["lineitem"]["columns"]
+    by_name = {c["name"]: c for c in li}
+    assert by_name["l_shipdate"]["dtype"] == "date32[day]"
+    assert by_name["l_returnflag"]["dictionary"] is True
+    assert by_name["l_quantity"]["dictionary"] is False
+
+
+# ---------------------------------------------------------------------------
+# property-style round-trip over the full rel/expr vocabulary
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_plans():
+    lineitem = ReadRel("lineitem", ["l_orderkey", "l_quantity", "l_comment"])
+    orders = ReadRel("orders", ["o_orderkey", "o_orderdate"],
+                     filter=Between(Col("o_orderdate"),
+                                    DateLit("1994-01-01"),
+                                    DateLit("1994-12-31")))
+    exprs = [
+        UnOp("not", Like(Col("l_comment"), "%special%requests%", True)),
+        InList(Col("l_orderkey"), [1, 2, 3], negate=True),
+        Case([(Col("l_quantity") > 10, Lit(1.5))], Lit(0.0)),
+        Cast(ExtractYear(Col("o_orderdate")), "float64"),
+        Substr(Col("l_comment"), 1, 3) == Lit("abc"),
+        StartsWith(Col("l_comment"), "fur"),
+        Col("l_quantity") * (Lit(1) - Col("l_quantity") / Lit(7.0)),
+    ]
+    plans = [FilterRel(lineitem, e) for e in exprs[:2]]
+    plans.append(ProjectRel(lineitem, [("v", e) for e in [exprs[2]]],
+                            keep_input=True))
+    plans.append(JoinRel(lineitem, orders, ["l_orderkey"], ["o_orderkey"],
+                         how="mark", mark_name="__hit",
+                         post_filter=Col("l_quantity") > 5))
+    plans.append(AggregateRel(
+        lineitem, ["l_orderkey"],
+        [AggSpec("sum", Col("l_quantity"), "s"),
+         AggSpec("count_star", None, "n"),
+         AggSpec("count_distinct", Col("l_comment"), "d")],
+        having=Col("s") > Lit(10)))
+    plans.append(SortRel(FetchRel(lineitem, 100),
+                         [SortKey("l_quantity", False),
+                          SortKey("l_orderkey", True)], limit=7))
+    plans.append(ExchangeRel(lineitem, "shuffle", ["l_orderkey"]))
+    plans.append(SetRel([lineitem, ReadRel("lineitem")], "union_all"))
+    plans.append(WindowRel(lineitem, ["l_orderkey"],
+                           [SortKey("l_quantity", False)], "row_number",
+                           None, "rn"))
+    plans.append(WindowRel(lineitem, [], [], "sum", "l_quantity", "tot"))
+    plans.append(FilterRel(
+        lineitem,
+        Col("l_quantity") > ScalarSubquery(
+            AggregateRel(ReadRel("lineitem", ["l_quantity"]), [],
+                         [AggSpec("avg", Col("l_quantity"), "a")]), "a")))
+    return plans
+
+
+@pytest.mark.parametrize("i", range(len(_synthetic_plans())))
+def test_synthetic_vocabulary_roundtrip(i):
+    plan = _synthetic_plans()[i]
+    wire = emit(plan, DEFAULT_CATALOG)
+    blob = wire_bytes(wire)
+    restored = ingest(json.loads(blob.decode()))   # through real JSON text
+    assert plan_equal(restored, plan)
+    assert wire_bytes(emit(restored, DEFAULT_CATALOG)) == blob
+    # the legacy JSON round-trip must agree on the same vocabulary
+    assert plan_equal(plan_from_json(plan_to_json(plan)), plan)
+
+
+def test_new_rels_have_explain_support():
+    plans = _synthetic_plans()
+    txt = "\n".join(explain(p) for p in plans)
+    assert "SetRel union_all over 2 inputs" in txt
+    assert "WindowRel row_number partition by ['l_orderkey']" in txt
+    assert "order by l_quantity desc" in txt
+    assert "WindowRel sum(l_quantity)" in txt
+
+
+# ---------------------------------------------------------------------------
+# actionable rejection of malformed wire
+# ---------------------------------------------------------------------------
+
+
+def _q6_wire():
+    return sql_to_wire(SQL_QUERIES[6])
+
+
+def test_unknown_rel_type_is_substrait_error():
+    wire = _q6_wire()
+    root = wire["relations"][0]["root"]["input"]
+    key, body = next(iter(root.items()))
+    wire["relations"][0]["root"]["input"] = {"windowagg_v2": body}
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    msg = str(ei.value)
+    assert "windowagg_v2" in msg and "read" in msg  # names the vocabulary
+
+
+def test_unregistered_function_name_is_substrait_error():
+    wire = _q6_wire()
+    wire["extensions"][0]["extensionFunction"]["name"] = "frobnicate"
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "frobnicate" in str(ei.value)
+    assert "registry" in str(ei.value)
+
+
+def test_undeclared_uri_reference_is_substrait_error():
+    wire = _q6_wire()
+    wire["extensions"][0]["extensionFunction"]["extensionUriReference"] = 404
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "404" in str(ei.value)
+
+
+def test_dangling_function_reference_is_substrait_error():
+    wire = _q6_wire()
+
+    def bump(node):
+        if isinstance(node, dict):
+            if "functionReference" in node:
+                node["functionReference"] = 9999
+                return True
+            return any(bump(v) for v in node.values())
+        if isinstance(node, list):
+            return any(bump(v) for v in node)
+        return False
+
+    assert bump(wire["relations"])
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "9999" in str(ei.value)
+
+
+def test_missing_field_is_substrait_error_with_path():
+    wire = _q6_wire()
+
+    def find_read(node):
+        if isinstance(node, dict):
+            if "read" in node:
+                return node["read"]
+            for v in node.values():
+                r = find_read(v)
+                if r is not None:
+                    return r
+        if isinstance(node, list):
+            for v in node:
+                r = find_read(v)
+                if r is not None:
+                    return r
+        return None
+
+    read = find_read(wire["relations"])
+    del read["table"]
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "table" in str(ei.value)
+    assert "relations[0].root.input" in str(ei.value)
+
+
+def test_version_major_mismatch_rejected():
+    wire = _q6_wire()
+    wire["version"]["majorNumber"] = 7
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "major" in str(ei.value).lower()
+
+
+def test_invalid_window_and_set_wire_rejected():
+    """Semantic wire validation: shapes that would only explode at
+    execution time are refused at ingest with a SubstraitError."""
+    base = emit(WindowRel(ReadRel("lineitem"), [], [], "sum",
+                          "l_quantity", "s"), DEFAULT_CATALOG)
+    # window aggregate without an argument column
+    wire = json.loads(wire_bytes(base).decode())
+    wire["relations"][0]["root"]["input"]["window"]["argument"] = None
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "argument" in str(ei.value)
+    # count_star is an aggregate measure, not a window function
+    wire = json.loads(wire_bytes(
+        emit(AggregateRel(ReadRel("lineitem"), [],
+                          [AggSpec("count_star", None, "n")]),
+             DEFAULT_CATALOG)).decode())
+    anchor = wire["extensions"][0]["extensionFunction"]["functionAnchor"]
+    wire["relations"][0]["root"]["input"] = {
+        "window": {"input": {"read": {"table": "lineitem"}},
+                   "partitionKeys": [], "orderKeys": [],
+                   "functionReference": anchor, "argument": None,
+                   "name": "n"}}
+    with pytest.raises(SubstraitError) as ei:
+        ingest(wire)
+    assert "count_star" in str(ei.value)
+    # a set relation with no inputs
+    sw = json.loads(wire_bytes(
+        emit(SetRel([ReadRel("lineitem")]), DEFAULT_CATALOG)).decode())
+    sw["relations"][0]["root"]["input"]["set"]["inputs"] = []
+    with pytest.raises(SubstraitError) as ei:
+        ingest(sw)
+    assert "at least one input" in str(ei.value)
+
+
+def test_wrong_typed_wire_values_rejected():
+    """Type confusion (not just deletion) must also stay SubstraitError."""
+    wire = _q6_wire()
+    wire["relations"][0] = "not an object"
+    with pytest.raises(SubstraitError):
+        ingest(wire)
+    wire = _q6_wire()
+    wire["extensions"][0] = "not an object"
+    with pytest.raises(SubstraitError):
+        ingest(wire)
+    wire = _q6_wire()
+    wire["extensionUris"] = "nope"
+    with pytest.raises(SubstraitError):
+        ingest(wire)
+
+
+def test_garbage_inputs_rejected():
+    with pytest.raises(SubstraitError):
+        ingest("this is not json {")
+    with pytest.raises(SubstraitError):
+        ingest([1, 2, 3])
+    with pytest.raises(SubstraitError):
+        ingest({"relations": []})
+    wire = _q6_wire()
+    del wire["version"]
+    with pytest.raises(SubstraitError):
+        ingest(wire)
+
+
+def test_mutations_never_leak_keyerror():
+    """Fuzz-ish sweep: deleting any single dict key from the wire must
+    produce SubstraitError (or still ingest fine for optional fields) —
+    never a raw KeyError/TypeError."""
+    base = wire_bytes(_q6_wire())
+
+    def paths(node, prefix=()):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                yield prefix + (k,)
+                yield from paths(v, prefix + (k,))
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                yield from paths(v, prefix + (i,))
+
+    all_paths = list(paths(json.loads(base.decode())))
+    for path in all_paths:
+        wire = json.loads(base.decode())
+        node = wire
+        for p in path[:-1]:
+            node = node[p]
+        del node[path[-1]]
+        try:
+            ingest(wire)
+        except SubstraitError:
+            pass   # actionable rejection: exactly the contract
+        except (KeyError, AttributeError, IndexError, TypeError) as e:
+            raise AssertionError(
+                f"deleting {'.'.join(map(str, path))} leaked "
+                f"{type(e).__name__}: {e}")
+
+
+# ---------------------------------------------------------------------------
+# hybrid router
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qid", [1, 6, 13])
+def test_supported_queries_form_one_device_fragment(qid, tpch_engine,
+                                                    tpch_db):
+    wire = sql_to_wire(SQL_QUERIES[qid])
+    before_h = tpch_engine.buffers.boundary_to_host_bytes
+    before_d = tpch_engine.buffers.boundary_to_device_bytes
+    tpch_engine.accelerate(wire)                       # warm compile caches
+    with instrument.track_transfers() as counter:
+        got = tpch_engine.accelerate(wire)
+    report = tpch_engine.last_accelerate_report
+    assert report["device_fragments"] == 1
+    assert report["host_fragments"] == 0
+    assert report["device_rel_fraction"] == 1.0
+    assert report["boundary_to_host_bytes"] == 0
+    assert report["boundary_to_device_bytes"] == 0
+    assert tpch_engine.buffers.boundary_to_host_bytes == before_h
+    assert tpch_engine.buffers.boundary_to_device_bytes == before_d
+    assert counter.in_pipeline == 0, (
+        f"q{qid}: {counter.in_pipeline} host transfers inside the device "
+        "fragment")
+    ref = run_sql(SQL_QUERIES[qid], tpch_db)
+    assert_tables_equal(got.to_host(), ref)
+
+
+def _window_plan():
+    return FilterRel(
+        WindowRel(ReadRel("lineitem", ["l_orderkey", "l_quantity"]),
+                  ["l_orderkey"], [SortKey("l_quantity", False)],
+                  "row_number", None, "rn"),
+        BinOp("==", Col("rn"), Lit(1)))
+
+
+def test_unsupported_rel_degrades_to_hybrid_not_raise(tpch_engine, tpch_db):
+    plan = _window_plan()
+    # the device engine alone cannot lower WindowRel ...
+    with pytest.raises(TypeError):
+        tpch_engine.execute(_window_plan())
+    # ... but the drop-in path degrades to hybrid execution
+    before_h = tpch_engine.buffers.boundary_to_host_bytes
+    before_d = tpch_engine.buffers.boundary_to_device_bytes
+    got = tpch_engine.accelerate(emit(plan, DEFAULT_CATALOG))
+    report = tpch_engine.last_accelerate_report
+    assert report["host_fragments"] == 1
+    assert report["device_fragments"] == 2      # scan below + filter above
+    assert 0 < report["device_rel_fraction"] < 1
+    # boundary transfers are accounted on the buffer manager
+    assert report["boundary_to_host_bytes"] > 0
+    assert report["boundary_to_device_bytes"] > 0
+    assert tpch_engine.buffers.boundary_to_host_bytes \
+        == before_h + report["boundary_to_host_bytes"]
+    assert tpch_engine.buffers.boundary_to_device_bytes \
+        == before_d + report["boundary_to_device_bytes"]
+    # row-exact vs the pure-host oracle executing the identical plan
+    ref = FallbackEngine(tpch_db).execute(_window_plan())
+    assert_tables_equal(got.to_host(), ref)
+
+
+def test_setrel_union_all_hybrid(tpch_engine, tpch_db):
+    half1 = ReadRel("orders", ["o_orderkey", "o_totalprice"],
+                    filter=Col("o_orderkey") <= Lit(1000))
+    half2 = ReadRel("orders", ["o_orderkey", "o_totalprice"],
+                    filter=Col("o_orderkey") > Lit(1000))
+    plan = AggregateRel(SetRel([half1, half2]), [],
+                        [AggSpec("count_star", None, "n"),
+                         AggSpec("sum", Col("o_totalprice"), "s")])
+    got = tpch_engine.accelerate(emit(plan, DEFAULT_CATALOG))
+    report = tpch_engine.last_accelerate_report
+    assert report["host_fragments"] == 1        # the SetRel itself
+    assert report["device_fragments"] == 3      # two scans + the aggregate
+    ref = FallbackEngine(tpch_db).execute(copy.deepcopy(plan))
+    assert_tables_equal(got.to_host(), ref)
+
+
+def test_per_expr_capability_subtraction_routes_to_host(tpch_engine, tpch_db):
+    """An engine that lacks LIKE must degrade the containing rel to the
+    host fragment — the per-expr half of the capability table."""
+    registry = CapabilityRegistry(host_only_exprs=["Like"])
+    sql = SQL_QUERIES[13]                       # LIKE lives in a join build
+    plan = sql_to_plan(sql)
+    assert any(isinstance(e, Like)
+               for r in walk_deep(plan)
+               for e in _all_exprs(r)), "q13 lost its LIKE predicate"
+    got = tpch_engine.accelerate(sql_to_wire(sql), registry=registry)
+    report = tpch_engine.last_accelerate_report
+    assert report["host_fragments"] >= 1
+    assert report["device_rel_fraction"] < 1.0
+    ref = run_sql(sql, tpch_db)
+    assert_tables_equal(got.to_host(), ref)
+
+
+def _all_exprs(rel):
+    from repro.core.plan import rel_exprs
+    from repro.relational.expressions import walk_expr
+    for e in rel_exprs(rel):
+        yield from walk_expr(e)
+
+
+def test_fragment_planning_is_pure_and_explainable(tpch_engine):
+    router = HybridRouter(tpch_engine)
+    frags = router.plan_fragments(_window_plan())
+    assert [f.placement for f in frags] == ["device", "host", "device"]
+    assert frags[1].deps == [0] and frags[2].deps == [1]
+    assert router.device_fragment_fraction(_window_plan()) == \
+        pytest.approx(2 / 3)
+    txt = explain_fragments(frags)
+    assert "Fragment 0 [device]" in txt
+    assert "Fragment 1 [host] deps=[0]" in txt
+    assert "[hybrid boundary]" in txt
+    # pure device plan: fraction 1.0, single fragment
+    q6 = sql_to_plan(SQL_QUERIES[6])
+    assert router.device_fragment_fraction(q6) == 1.0
+    assert len(router.plan_fragments(q6)) == 1
+
+
+def test_host_rooted_plan_accounts_result_conversion(tpch_engine, tpch_db):
+    """When the root fragment itself runs on the host, the result's trip
+    back to device is a boundary crossing and must be accounted."""
+    plan = WindowRel(ReadRel("lineitem", ["l_orderkey", "l_quantity"]),
+                     ["l_orderkey"], [], "sum", "l_quantity", "s")
+    before = tpch_engine.buffers.boundary_to_device_bytes
+    got = tpch_engine.accelerate(emit(plan, DEFAULT_CATALOG))
+    report = tpch_engine.last_accelerate_report
+    assert report["fragments"][-1]["placement"] == "host"
+    assert report["boundary_to_device_bytes"] > 0
+    assert tpch_engine.buffers.boundary_to_device_bytes \
+        == before + report["boundary_to_device_bytes"]
+    ref = FallbackEngine(tpch_db).execute(
+        WindowRel(ReadRel("lineitem", ["l_orderkey", "l_quantity"]),
+                  ["l_orderkey"], [], "sum", "l_quantity", "s"))
+    assert_tables_equal(got.to_host(), ref)
+
+
+def test_window_oracle_semantics():
+    """WindowRel numpy semantics sanity: row_number + partition aggregate."""
+    db = {"t": {"g": np.array([1, 1, 2, 2, 2]),
+                "v": np.array([3.0, 1.0, 5.0, 4.0, 6.0])}}
+    fb = FallbackEngine(db)
+    rn = fb.execute(WindowRel(ReadRel("t"), ["g"],
+                              [SortKey("v", True)], "row_number", None, "rn"))
+    assert list(rn["rn"]) == [2, 1, 2, 1, 3]
+    tot = fb.execute(WindowRel(ReadRel("t"), ["g"], [], "sum", "v", "s"))
+    assert list(tot["s"]) == [4.0, 4.0, 15.0, 15.0, 15.0]
+    avg = fb.execute(WindowRel(ReadRel("t"), [], [], "avg", "v", "a"))
+    np.testing.assert_allclose(avg["a"], np.full(5, 19.0 / 5))
+
+
+# ---------------------------------------------------------------------------
+# ingested plans execute row-exact vs the SQL path (acceptance sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qid", sorted(SQL_QUERIES))
+def test_ingested_golden_executes_row_exact(qid, tpch_engine, tpch_db):
+    """The full drop-in loop at query scale: checked-in golden wire →
+    ingest → accelerate, vs the SQL path on the numpy oracle."""
+    blob = _golden(f"tpch_q{qid}")
+    ref = run_sql(SQL_QUERIES[qid], tpch_db)          # SQL path, oracle
+    got = tpch_engine.accelerate(blob)                # wire path, engine
+    assert tpch_engine.last_accelerate_report["device_rel_fraction"] == 1.0
+    assert_tables_equal(got.to_host(), ref)
+    # wire path on the oracle as well: ingest once more (execution mutates
+    # scalar-subquery exprs), run on the host engine
+    host = FallbackEngine(tpch_db).execute(ingest(blob))
+    assert_tables_equal(host, ref)
