@@ -2,9 +2,14 @@
 
 The paper's finding: joins dominate join-heavy queries (Q2-Q5, Q7-Q8,
 Q20-Q22), group-by matters for Q1/Q10/Q16/Q18, filters dominate Q6/Q19/Q13.
-This benchmark reports the same decomposition from the pipeline executor's
-per-operator timers (``profile=True`` — the only mode that inserts per-op
-barriers) and checks the headline pattern.
+This benchmark reports the same decomposition from ``QueryProfile`` — one
+format for both execution modes:
+
+  * ``profile=True`` engine — the pre-fusion eager path with per-op
+    barriers (the original Figure-5 protocol);
+  * default fused engine with ``analyze=True`` — the production path with
+    opt-in per-region barriers, where fused regions report under the
+    "fused" category and scans/sinks stay attributable.
 
 It also runs every query once on the *default* fused engine under the
 host-transfer counter, proving the compiled data path keeps columns
@@ -13,6 +18,11 @@ device-resident end to end (the §3.2 residency claim as a number: 0).
 from __future__ import annotations
 
 CATS = ("filter", "join", "groupby", "orderby", "project", "other")
+
+
+def _shares(totals: dict) -> tuple[float, dict]:
+    total = sum(totals.values()) or 1e-12
+    return total, {c: totals.get(c, 0.0) / total for c in totals}
 
 
 def run(scale_factor: float = 0.02):
@@ -29,26 +39,37 @@ def run(scale_factor: float = 0.02):
     dominant = {}
     for qid in sorted(QUERIES):
         eng.execute(QUERIES[qid]())              # warm
-        eng.executor.op_times.clear()
         eng.execute(QUERIES[qid]())
-        times = dict(eng.executor.op_times)
-        total = sum(times.values()) or 1e-12
-        shares = {c: times.get(c, 0.0) / total for c in CATS}
-        top = max(shares, key=shares.get)
+        # per-operator numbers come from the unified QueryProfile record
+        # (profile=True keeps a live builder on every query)
+        totals = dict(eng.last_profile.operator_totals)
+        total, shares = _shares(totals)
+        top = max((c for c in CATS), key=lambda c: shares.get(c, 0.0))
         dominant[qid] = top
         detail = ";".join(f"{c}={shares[c]*100:.0f}%" for c in CATS
-                          if shares[c] >= 0.005)
+                          if shares.get(c, 0.0) >= 0.005)
         print(f"breakdown_q{qid},{total*1e6:.0f},dominant={top};{detail}")
 
     join_heavy = [q for q in (3, 5, 7, 8, 9, 10, 21) if dominant[q] == "join"]
     print(f"breakdown_summary,0,join_dominant_in={len(join_heavy)}of7_joinheavy"
           f";q6_dominant={dominant[6]};q1_groupby_or_filter={dominant[1]}")
 
-    # device residency on the default fused engine: must read 0 transfers
+    # same decomposition from the *fused* production path via analyze=True —
+    # identical QueryProfile format, fused regions land under "fused"
     fused = SiriusEngine()
     load_into_engine(fused, db)
     for qid in sorted(QUERIES):
         fused.execute(QUERIES[qid]())            # warm/compile
+    for qid in sorted(QUERIES):
+        fused.execute(QUERIES[qid](), analyze=True)
+        totals = dict(fused.last_profile.operator_totals)
+        total, shares = _shares(totals)
+        detail = ";".join(
+            f"{c}={s*100:.0f}%" for c, s in
+            sorted(shares.items(), key=lambda kv: -kv[1]) if s >= 0.005)
+        print(f"breakdown_fused_q{qid},{total*1e6:.0f},{detail}")
+
+    # device residency on the default fused engine: must read 0 transfers
     with instrument.track_transfers() as counter:
         for qid in sorted(QUERIES):
             fused.execute(QUERIES[qid]())

@@ -63,6 +63,13 @@ def run(n_rows: int = 200_000, repeats: int = 2,
           f"geomean_ratio={geo:.2f}x")
 
     if json_path:
+        # per-query EXPLAIN ANALYZE profiles for profile_diff.py, collected
+        # after the timing loops on warm caches (never in the timed path)
+        profiles = {}
+        for qid, sql in cb.CLICKBENCH_QUERIES.items():
+            eng.execute(sql_to_plan(sql, catalog), analyze=True,
+                        query_text=f"clickbench {qid}")
+            profiles[qid] = eng.last_profile.to_dict()
         payload = {
             "workload": "clickbench",
             "rows": n_rows,
@@ -70,7 +77,8 @@ def run(n_rows: int = 200_000, repeats: int = 2,
             "use_kernels": use_kernels,
             "cold_load_s": round(cold_load_s, 4),
             "queries": {qid: {"engine_s": round(t_eng, 6),
-                              "host_s": round(t_fb, 6)}
+                              "host_s": round(t_fb, 6),
+                              "profile": profiles[qid]}
                         for qid, t_eng, t_fb in rows},
             "total_engine_s": round(tot_e, 6),
             "total_host_s": round(tot_f, 6),

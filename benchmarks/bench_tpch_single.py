@@ -82,6 +82,16 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
                 keng.execute(QUERIES[qid]())
             kernel_hits = keng.backend.hit_counts()
             kernel_hits["sampled_queries"] = [1, 3, 6]
+        # per-query EXPLAIN ANALYZE profiles, embedded so profile_diff.py
+        # can attribute any BENCH regression to the operator that moved.
+        # Collected after the timing loops (the analyze barriers must never
+        # touch the timed path); caches are warm, so these are steady-state
+        # operator timings, not first-trace compile noise.
+        profiles = {}
+        for qid in sorted(QUERIES):
+            eng.execute(QUERIES[qid](), analyze=True,
+                        query_text=f"tpch q{qid}")
+            profiles[f"q{qid}"] = eng.last_profile.to_dict()
         payload = {
             "scale_factor": scale_factor,
             "repeats": repeats,
@@ -89,7 +99,8 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
             "cold_load_s": round(cold_load_s, 4),
             "queries": {f"q{qid}": {"engine_s": round(t_eng, 6),
                                     "host_s": round(t_fb, 6),
-                                    "device_fragment_fraction": frac[qid]}
+                                    "device_fragment_fraction": frac[qid],
+                                    "profile": profiles[f"q{qid}"]}
                         for qid, t_eng, t_fb in rows},
             "total_engine_s": round(tot_e, 6),
             "total_host_s": round(tot_f, 6),

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Compare two EXPLAIN ANALYZE profile JSONs and name what moved.
+
+    python scripts/profile_diff.py old.json new.json [--threshold 1.5]
+                                                     [--min-delta-ms 2]
+
+Inputs are either single ``QueryProfile`` JSON files (``profile.to_json()``,
+CI smoke artifacts) or BENCH_*.json files whose ``queries`` entries embed a
+``"profile"`` dict — in which case each query present in both files is
+diffed.  An operator/phase **regresses** when it slowed by more than
+``threshold``× AND by more than ``min-delta-ms`` wall milliseconds (both
+gates, so microsecond-scale noise never fails a build).  Exit status: 0
+clean, 1 regression(s) found, 2 usage/input error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.observability import diff_profiles, validate_profile  # noqa: E402
+
+
+def _load_profiles(path: str) -> dict:
+    """→ {label: profile dict}.  Single-profile files get the label ''."""
+    with open(path) as f:
+        d = json.load(f)
+    if not isinstance(d, dict):
+        raise ValueError(f"{path}: expected a JSON object")
+    if "schema_version" in d:
+        errors = validate_profile(d)
+        if errors:
+            raise ValueError(f"{path}: invalid profile: " + "; ".join(errors))
+        return {"": d}
+    queries = d.get("queries")
+    if not isinstance(queries, dict):
+        raise ValueError(f"{path}: neither a QueryProfile JSON nor a "
+                         "BENCH_*.json with a 'queries' map")
+    out = {}
+    for name, entry in sorted(queries.items()):
+        prof = entry.get("profile") if isinstance(entry, dict) else None
+        if prof is not None:
+            errors = validate_profile(prof)
+            if errors:
+                raise ValueError(f"{path}: query {name!r} profile invalid: "
+                                 + "; ".join(errors))
+            out[name] = prof
+    if not out:
+        raise ValueError(f"{path}: no embedded profiles found (re-run the "
+                         "benchmark with profile embedding enabled)")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline profile JSON (or BENCH_*.json)")
+    ap.add_argument("new", help="candidate profile JSON (or BENCH_*.json)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="slowdown ratio gate (default 1.5x)")
+    ap.add_argument("--min-delta-ms", type=float, default=2.0,
+                    help="absolute wall-time gate in ms (default 2)")
+    args = ap.parse_args(argv)
+
+    try:
+        old, new = _load_profiles(args.old), _load_profiles(args.new)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    shared = sorted(set(old) & set(new))
+    if not shared:
+        print("error: no queries in common between the two files",
+              file=sys.stderr)
+        return 2
+    only_old, only_new = sorted(set(old) - set(new)), sorted(set(new) - set(old))
+    if only_old:
+        print(f"note: only in {args.old}: {only_old}")
+    if only_new:
+        print(f"note: only in {args.new}: {only_new}")
+
+    any_regression = False
+    for name in shared:
+        regressions, report = diff_profiles(
+            old[name], new[name], threshold=args.threshold,
+            min_delta_s=args.min_delta_ms / 1e3)
+        label = name or "query"
+        if not report:
+            print(f"{label}: no movement above "
+                  f"{args.min_delta_ms:g} ms")
+            continue
+        print(f"{label}:")
+        for line in report:
+            print("  " + line)
+        any_regression |= bool(regressions)
+
+    if any_regression:
+        print("\nFAIL: regressions found (see REGRESSION lines above)")
+        return 1
+    print("\nOK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,10 +11,17 @@ the optimized plan fails to round-trip through the JSON wire format, or if
 predicate pushdown failed to land a filter in a ReadRel where one is
 expected.  This is the fast CI job guarding the frontend.
 
+``--analyze`` instead runs EXPLAIN ANALYZE end-to-end on one TPC-H query
+(Q6) and one ClickBench query against tiny generated data, validates the
+emitted profile JSON against the schema, and writes the profiles to
+``--artifacts-dir`` (default ``profile_artifacts/``) for CI upload.
+
 Run:  PYTHONPATH=src python scripts/sql_smoke.py [--workload tpch|clickbench|all] [-v]
+      PYTHONPATH=src python scripts/sql_smoke.py --analyze [--artifacts-dir DIR]
 """
 from __future__ import annotations
 
+import os
 import sys
 
 
@@ -51,6 +58,54 @@ def check_workload(name: str, queries: dict, pushdown_qids, catalog,
     return failures
 
 
+def analyze_smoke(artifacts_dir: str = "profile_artifacts") -> int:
+    """EXPLAIN ANALYZE one TPC-H + one ClickBench query on tiny data,
+    validate the profile JSON schema, and write the artifacts."""
+    from repro.core.executor import SiriusEngine
+    from repro.data import clickbench as cb
+    from repro.data import tpch
+    from repro.data.tpch_queries import SQL_QUERIES
+    from repro.observability import QueryProfile, validate_profile
+
+    os.makedirs(artifacts_dir, exist_ok=True)
+    failures = 0
+
+    def run_one(name: str, engine, sql: str, catalog) -> None:
+        nonlocal failures
+        prof = engine.sql("EXPLAIN ANALYZE " + sql, catalog=catalog)
+        errors = validate_profile(prof.to_dict())
+        # the export must also survive a JSON round-trip unchanged
+        restored = QueryProfile.from_json(prof.to_json())
+        if restored.to_json() != prof.to_json():
+            errors.append("to_json round-trip drifted")
+        path = os.path.join(artifacts_dir, f"profile_{name}.json")
+        with open(path, "w") as f:
+            f.write(prof.to_json())
+        if errors:
+            failures += 1
+            print(f"{name}: FAIL — {errors}")
+        else:
+            n_ops = sum(len(p.operators) for p in prof.pipelines)
+            print(f"{name}: ok — {prof.total_seconds * 1e3:.1f} ms, "
+                  f"{len(prof.pipelines)} pipeline(s), {n_ops} operator(s) "
+                  f"-> {path}")
+            print(prof.pretty())
+            print()
+
+    eng = SiriusEngine()
+    tpch.load_into_engine(eng, tpch.generate(0.001))
+    run_one("tpch_q6", eng, SQL_QUERIES[6], None)
+
+    cb_eng = SiriusEngine()
+    cb.load_into_engine(cb_eng, cb.generate(5_000))
+    run_one("clickbench_q2", cb_eng, cb.CLICKBENCH_QUERIES["q2"],
+            cb.clickbench_catalog(5_000))
+
+    print(f"{2 - failures}/2 EXPLAIN ANALYZE smoke queries produced "
+          "schema-valid profiles")
+    return 1 if failures else 0
+
+
 def main(workload: str = "all", verbose: bool = False) -> int:
     if workload not in ("tpch", "clickbench", "all"):
         print(f"unknown workload {workload!r}: expected tpch|clickbench|all")
@@ -73,6 +128,15 @@ def main(workload: str = "all", verbose: bool = False) -> int:
 
 if __name__ == "__main__":
     args = sys.argv[1:]
+    if "--analyze" in args:
+        out_dir = "profile_artifacts"
+        if "--artifacts-dir" in args:
+            i = args.index("--artifacts-dir")
+            if i + 1 >= len(args):
+                print("--artifacts-dir requires a path")
+                sys.exit(2)
+            out_dir = args[i + 1]
+        sys.exit(analyze_smoke(out_dir))
     wl = "all"
     if "--workload" in args:
         i = args.index("--workload")

@@ -21,6 +21,7 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+from ..observability.metrics import METRICS
 from ..relational.table import Column, Table
 
 
@@ -74,6 +75,7 @@ class BufferManager:
         self._cache[name] = _CacheEntry(dev, nbytes)
         self.caching_used += nbytes
         self.cold_copy_bytes += nbytes
+        METRICS.counter("buffers.cold_copy_bytes").inc(nbytes)
         return dev
 
     def get(self, name: str) -> Table:
@@ -116,6 +118,7 @@ class BufferManager:
         self.caching_used -= e.nbytes
         self.spill_count += 1
         self.host_transfer_bytes += e.nbytes
+        METRICS.counter("buffers.spill_bytes").inc(e.nbytes)
 
     def _promote(self, name: str, e: _CacheEntry) -> None:
         self._make_room(e.nbytes)
@@ -129,17 +132,20 @@ class BufferManager:
         self.caching_used += e.nbytes
         self.promote_count += 1
         self.host_transfer_bytes += e.nbytes
+        METRICS.counter("buffers.promote_bytes").inc(e.nbytes)
 
     # -- hybrid fragment boundary accounting ----------------------------------
     def account_boundary_to_host(self, nbytes: int) -> None:
         """A device fragment's output crossed to a host fragment."""
         self.boundary_to_host_bytes += nbytes
         self.host_transfer_bytes += nbytes
+        METRICS.counter("buffers.boundary_to_host_bytes").inc(nbytes)
 
     def account_boundary_to_device(self, nbytes: int) -> None:
         """A host fragment's output crossed back onto the device."""
         self.boundary_to_device_bytes += nbytes
         self.host_transfer_bytes += nbytes
+        METRICS.counter("buffers.boundary_to_device_bytes").inc(nbytes)
 
     # -- processing region ----------------------------------------------------
     def alloc_processing(self, nbytes: int) -> None:
@@ -149,6 +155,7 @@ class BufferManager:
                 f"> {self.processing_capacity}")
         self.processing_used += nbytes
         self.processing_peak = max(self.processing_peak, self.processing_used)
+        METRICS.gauge("buffers.processing_used").set(self.processing_used)
 
     def free_processing(self, nbytes: int) -> None:
         self.processing_used = max(0, self.processing_used - nbytes)

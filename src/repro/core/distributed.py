@@ -212,6 +212,13 @@ class DistributedEngine:
         self.timers["other"] = max(
             total - self.timers["compute"] - self.timers["exchange"], 0.0)
         self.timers["total"] = total
+        # publish phase timers into the process-wide registry so distributed
+        # runs show up next to single-device telemetry
+        from ..observability.metrics import METRICS
+        for kind, secs in self.timers.items():
+            if isinstance(secs, (int, float)) and kind != "resumed_from":
+                METRICS.counter(f"distributed.{kind}_seconds").inc(secs)
+        METRICS.histogram("distributed.query_seconds").observe(total)
         return final
 
     def _elastic_recover(self):

@@ -8,15 +8,22 @@ pipeline execution is **push-based**: the executor owns all state (build
 tables, partial agg inputs) and pushes morsels into stateless operator
 callables.
 
-Two execution modes (DESIGN.md "Compiled pipelines & device residency"):
+Three execution modes (DESIGN.md "Compiled pipelines & device residency" +
+§12 "Observability & EXPLAIN ANALYZE"):
 
 * **default** — each pipeline's contiguous Filter/Project/Probe chain is
   fused into a single jitted region by ``pipeline_compiler`` (cached across
   queries by plan signature), operators dispatch asynchronously, and the
   executor syncs **once per pipeline sink**;
-* **profile=True** — the pre-fusion path: every operator runs eagerly with a
-  ``block_until_ready`` barrier and per-operator wall time accumulated for
-  the Figure-5 breakdown benchmark.
+* **analyze=True** (per call) — the same fused regions, but with opt-in
+  sync points at every region/operator boundary so each stage's wall time
+  and rows in/out land in a ``QueryProfile`` (``executor.last_profile``).
+  Pipelines are serialized (one worker) so operator wall clocks never
+  overlap and per-operator times sum to ≤ the query total;
+* **profile=True** (per engine) — the legacy pre-fusion path: every
+  operator runs eagerly with a ``block_until_ready`` barrier and
+  per-operator wall time accumulated for the Figure-5 breakdown benchmark
+  (also recorded into a QueryProfile, so both paths report one format).
 """
 from __future__ import annotations
 
@@ -32,16 +39,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..buffer.manager import BufferManager
+from ..observability import (
+    METRICS, OperatorProfile, PipelineProfile, ProfileBuilder, QueryProfile,
+)
 from ..relational.aggregate import group_aggregate
 from ..relational.expressions import Expr, Lit, evaluate
 from ..relational.join import hash_join
 from ..relational.sort import sort_table
 from ..relational.table import BOOL, Column, Table
 from . import instrument
-from .pipeline_compiler import PipelineCompiler
+from .pipeline_compiler import FusedSegment, PipelineCompiler
 from .plan import (
     AggregateRel, ExchangeRel, FetchRel, FilterRel, JoinRel, ProjectRel,
-    ReadRel, Rel, ScalarSubquery, SortRel, walk,
+    ReadRel, Rel, ScalarSubquery, SortRel, explain, walk,
 )
 
 
@@ -309,6 +319,13 @@ class PipelineExecutor:
         self.compiler = PipelineCompiler()
         self.op_times: Dict[str, float] = defaultdict(float)
         self.fallback_queries = 0
+        # EXPLAIN ANALYZE state: the active per-query collector (None on the
+        # default path — its presence is what switches on per-stage syncs)
+        # and the last completed QueryProfile
+        self._builder: Optional[ProfileBuilder] = None
+        self._analyze = False
+        self._scan_filter_s = 0.0
+        self.last_profile: Optional[QueryProfile] = None
 
     # -- scalar subqueries are resolved before pipeline lowering -------------
     def _resolve_subqueries(self, expr):
@@ -343,7 +360,66 @@ class PipelineExecutor:
                                 and isinstance(getattr(item, "expr", None), Expr):
                             item.expr = self._resolve_subqueries(item.expr)
 
-    def execute(self, plan: Rel) -> Table:
+    def execute(self, plan: Rel, analyze: bool = False,
+                query_text: Optional[str] = None) -> Table:
+        """Run ``plan``.  With ``analyze=True`` (or engine ``profile=True``)
+        a ``QueryProfile`` is assembled on ``self.last_profile``; the
+        default path is bit-identical to before — no extra syncs, no
+        per-stage timing.  Nested calls (scalar-subquery plans) record into
+        the enclosing query's profile."""
+        owns_builder = (analyze or self.profile) and self._builder is None
+        if owns_builder:
+            self._builder = ProfileBuilder(
+                query=query_text,
+                engine={"use_kernels": self.backend is not None,
+                        "compile_pipelines": self.compile_pipelines,
+                        "profile_mode": self.profile,
+                        "num_workers": self.num_workers})
+            self._analyze = bool(analyze)
+            metrics_before = self._metrics_snapshot()
+            trace_s0 = self.compiler.stats["trace_seconds"]
+            t_query = time.perf_counter()
+        try:
+            out = self._execute_inner(plan)
+        finally:
+            if owns_builder:
+                total = time.perf_counter() - t_query
+                builder, self._builder = self._builder, None
+                self._analyze = False
+                builder.plan_text = explain(plan)
+                compile_s = self.compiler.stats["trace_seconds"] - trace_s0
+                metrics = {
+                    k: v - metrics_before.get(k, 0)
+                    for k, v in self._metrics_snapshot().items()}
+                self.last_profile = builder.finalize(total, compile_s, metrics)
+                METRICS.histogram("executor.query_seconds").observe(total)
+        return out
+
+    def _metrics_snapshot(self) -> Dict[str, float]:
+        """Point-in-time view of this engine's counters; per-query deltas of
+        two snapshots become ``QueryProfile.metrics``.  The key set is
+        schema-stable: kernel counters appear (as zero) even without a
+        kernel backend."""
+        from ..relational import strings
+        snap: Dict[str, float] = {}
+        for k, v in self.compiler.stats.items():
+            snap[f"compiler.{k}"] = v
+        hits = (self.backend.hit_counts() if self.backend is not None
+                else {"filter": 0, "probe": 0, "agg": 0})
+        for k, v in hits.items():
+            snap[f"kernel.{k}_hits"] = v
+        b = self.buffers
+        snap["buffers.cold_copy_bytes"] = b.cold_copy_bytes
+        snap["buffers.host_transfer_bytes"] = b.host_transfer_bytes
+        snap["buffers.boundary_to_host_bytes"] = b.boundary_to_host_bytes
+        snap["buffers.boundary_to_device_bytes"] = b.boundary_to_device_bytes
+        snap["buffers.processing_peak"] = b.processing_peak
+        snap["executor.sync_barriers"] = instrument.sync_barriers.value
+        for k, v in strings.stats.items():
+            snap[f"strings.{k}"] = v
+        return snap
+
+    def _execute_inner(self, plan: Rel) -> Table:
         self._prepare(plan)
         lowering = PlanLowering(self.backend)
         final = lowering.lower(plan)
@@ -386,8 +462,11 @@ class PipelineExecutor:
                     if finished["n"] == len(pipelines):
                         done.set()
 
+        # profiling serializes pipelines so per-operator wall clocks never
+        # overlap (sum of operator times must stay <= query total)
+        n_workers = 1 if self._builder is not None else self.num_workers
         threads = [threading.Thread(target=worker, daemon=True)
-                   for _ in range(self.num_workers)]
+                   for _ in range(n_workers)]
         for t in threads:
             t.start()
         done.wait()
@@ -396,9 +475,10 @@ class PipelineExecutor:
         if errors:
             raise errors[0]
         out = final.sink.result.table
-        if out is not None and not self.profile:
+        if out is not None and not self.profile and not self._analyze:
             # the query's single host sync: materialize the result table
             jax.block_until_ready([c.data for c in out.columns.values()])
+            instrument.count_sync()
         return out
 
     # -- single pipeline ------------------------------------------------------
@@ -412,9 +492,17 @@ class PipelineExecutor:
                 if out is None:
                     mask = evaluate(source.filter, t)
                     out = t.filter_mask(mask.data)
+                if self._builder is not None:
+                    jax.block_until_ready(
+                        [c.data for c in out.columns.values()])
+                    instrument.count_sync()
+                dt = time.perf_counter() - t0
+                # keeps the pushed-down filter attributable as "filter" in
+                # the profile (the scan record subtracts it)
+                self._scan_filter_s = dt
                 t = out
                 if self.profile:
-                    self.op_times["filter"] += time.perf_counter() - t0
+                    self.op_times["filter"] += dt
             if source.columns:
                 keep = [c for c in source.columns if c in t]
                 if skip_filter and source.filter is not None:
@@ -456,12 +544,38 @@ class PipelineExecutor:
             if p.source.columns:
                 ops.append(SelectOp(p.source.columns))
             ops += list(p.ops)
+        builder = self._builder
+        rec = None
+        if builder is not None:
+            label = (f"scan:{p.source.table}" if isinstance(p.source, ReadRel)
+                     else "result")
+            rec = builder.start_pipeline(label, list(p.deps))
+            rows_in = (self.buffers.get(p.source.table).num_rows
+                       if isinstance(p.source, ReadRel) else None)
+            self._scan_filter_s = 0.0
+            t0 = time.perf_counter()
         src = self._source_table(p.source, skip_filter=fuse_scan_filter)
+        if builder is not None:
+            jax.block_until_ready([c.data for c in src.columns.values()])
+            instrument.count_sync()
+            dt = time.perf_counter() - t0
+            filt_s = self._scan_filter_s
+            base_rows = src.num_rows if rows_in is None else rows_in
+            if filt_s > 0:
+                # pushed-down ReadRel filter: report fetch and filter as
+                # separate operators so the breakdown stays category-exact
+                builder.add_operator(rec, label, "scan", base_rows, base_rows,
+                                     max(dt - filt_s, 0.0))
+                builder.add_operator(rec, "ReadFilter", "filter", base_rows,
+                                     src.num_rows, filt_s)
+            else:
+                builder.add_operator(rec, label, "scan", base_rows,
+                                     src.num_rows, dt)
         approx_bytes = max(src.nbytes, 1)
         self.buffers.alloc_processing(approx_bytes)
         try:
             if self.profile:
-                self._run_profiled(p, src)
+                self._run_profiled(p, src, rec)
                 return
             # default path: fused regions, fully async dispatch — downstream
             # pipelines consume the sink's device arrays without a barrier;
@@ -469,6 +583,9 @@ class PipelineExecutor:
             # (see ``execute``)
             stages = (self.compiler.prepare(ops, self.backend)
                       if self.compile_pipelines else ops)
+            if builder is not None:
+                self._run_analyzed(p, src, stages, rec, builder)
+                return
             for morsel in self._morsels(src):
                 t = morsel
                 for stage in stages:
@@ -478,25 +595,99 @@ class PipelineExecutor:
         finally:
             self.buffers.free_processing(approx_bytes)
 
-    def _run_profiled(self, p: Pipeline, src: Table) -> None:
+    def _stage_telemetry(self, stage):
+        """Name/category/attrs for a pipeline stage, read *after* its timer
+        stopped.  Fused regions also contribute their HLO cost estimates
+        (``est_flops`` / ``est_bytes``); the AOT lowering that computes them
+        runs here, outside the stage's wall-clock window."""
+        if isinstance(stage, FusedSegment):
+            info = stage.last_call_info or {}
+            attrs = {}
+            if "cache_hit" in info:
+                attrs["cache_hit"] = bool(info["cache_hit"])
+            if info.get("degraded"):
+                attrs["degraded"] = True
+            region = info.get("region")
+            if region is not None and "cost_args" in info:
+                attrs.update(region.cost_summary(*info["cost_args"]))
+            return stage.describe(), "fused", attrs
+        return type(stage).__name__, getattr(stage, "category", "other"), {}
+
+    def _run_analyzed(self, p: Pipeline, src: Table, stages, rec,
+                      builder: ProfileBuilder) -> None:
+        """EXPLAIN ANALYZE path: the *same* stages as the default path
+        (fused regions included) plus an opt-in barrier + timer per stage.
+        The extra syncs are the point — they pin wall time onto operators
+        that async dispatch would otherwise smear into the final sink."""
+        pushed = 0
+        sink_s = 0.0
+        for morsel in self._morsels(src):
+            t = morsel
+            for stage in stages:
+                rows_in = t.num_rows
+                t0 = time.perf_counter()
+                t = stage(t)
+                jax.block_until_ready([c.data for c in t.columns.values()])
+                instrument.count_sync()
+                dt = time.perf_counter() - t0
+                name, cat, attrs = self._stage_telemetry(stage)
+                builder.add_operator(rec, name, cat, rows_in, t.num_rows, dt,
+                                     **attrs)
+            pushed += t.num_rows
+            t0 = time.perf_counter()
+            p.sink.push(t)
+            sink_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        p.sink.finalize()
+        out = p.sink.result.table
+        if out is not None:
+            jax.block_until_ready([c.data for c in out.columns.values()])
+            instrument.count_sync()
+        sink_s += time.perf_counter() - t0
+        builder.add_operator(rec, type(p.sink).__name__, p.sink.category,
+                             pushed, out.num_rows if out is not None else 0,
+                             sink_s)
+
+    def _run_profiled(self, p: Pipeline, src: Table, rec=None) -> None:
         """Pre-fusion path: eager per-op dispatch with a barrier + timer per
-        operator, feeding the Figure-5 breakdown benchmark."""
+        operator, feeding the Figure-5 breakdown benchmark.  When a profile
+        builder is live the same measurements also land in the query's
+        ``QueryProfile``."""
+        builder = self._builder
+        pushed = 0
+        sink_s = 0.0
         for morsel in self._morsels(src):
             t = morsel
             for op in p.ops:
+                rows_in = t.num_rows
                 t0 = time.perf_counter()
                 t = op(t)
                 jax.block_until_ready([c.data for c in t.columns.values()])
-                self.op_times[op.category] += time.perf_counter() - t0
+                instrument.count_sync()
+                dt = time.perf_counter() - t0
+                self.op_times[op.category] += dt
+                if builder is not None:
+                    builder.add_operator(rec, type(op).__name__, op.category,
+                                         rows_in, t.num_rows, dt)
+            pushed += t.num_rows
             t0 = time.perf_counter()
             p.sink.push(t)
-            self.op_times[p.sink.category] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.op_times[p.sink.category] += dt
+            sink_s += dt
         t0 = time.perf_counter()
         p.sink.finalize()
-        if p.sink.result.table is not None:
-            jax.block_until_ready(
-                [c.data for c in p.sink.result.table.columns.values()])
-        self.op_times[p.sink.category] += time.perf_counter() - t0
+        out = p.sink.result.table
+        if out is not None:
+            jax.block_until_ready([c.data for c in out.columns.values()])
+            instrument.count_sync()
+        dt = time.perf_counter() - t0
+        self.op_times[p.sink.category] += dt
+        sink_s += dt
+        if builder is not None:
+            builder.add_operator(rec, type(p.sink).__name__, p.sink.category,
+                                 pushed, out.num_rows if out is not None else 0,
+                                 sink_s)
 
 
 # ---------------------------------------------------------------------------
@@ -523,6 +714,8 @@ class SiriusEngine:
         self.host_tables: Dict[str, dict] = {}
         # routing report of the most recent ``accelerate`` call
         self.last_accelerate_report: Optional[dict] = None
+        # QueryProfile of the most recent analyzed/profiled query
+        self.last_profile: Optional[QueryProfile] = None
         # host-side string dictionaries harvested at registration — kept
         # instead of the Tables themselves so the buffer manager stays free
         # to spill device columns (a pinned Table would defeat eviction)
@@ -546,23 +739,43 @@ class SiriusEngine:
         if host_data is not None:
             self.host_tables[name] = host_data
 
-    def execute(self, plan: Rel) -> Table:
-        return self.executor.execute(plan)
+    def execute(self, plan: Rel, analyze: bool = False,
+                query_text: Optional[str] = None) -> Table:
+        out = self.executor.execute(plan, analyze=analyze,
+                                    query_text=query_text)
+        if analyze or self.executor.profile:
+            self.last_profile = self.executor.last_profile
+        return out
 
-    def sql(self, text: str, catalog=None, optimize: bool = True) -> Table:
+    def sql(self, text: str, catalog=None, optimize: bool = True,
+            analyze: bool = False):
         """Drop-in entry point: SQL text → parse → optimize → execute.
 
         The optimizer's catalog is enriched with the registered tables'
         string dictionaries, so LIKE / IN / prefix predicates are costed by
         their measured dictionary hit rate instead of constants.
+
+        ``EXPLAIN ANALYZE <query>`` runs the query with per-operator
+        telemetry and returns the ``QueryProfile`` instead of the result
+        table.  ``analyze=True`` does the same but still returns the result
+        table; either way the profile lands on ``self.last_profile``.
         """
-        from ..sql import run_sql
+        from ..sql import EXPLAIN_ANALYZE_RE, run_sql, sql_to_plan
         from ..sql.binder import DEFAULT_CATALOG
         cat = (catalog or DEFAULT_CATALOG).with_dictionaries(
             self.table_dictionaries)
+        m = EXPLAIN_ANALYZE_RE.match(text)
+        if m:
+            text = text[m.end():]
+            plan = sql_to_plan(text, catalog=cat, optimize=optimize)
+            self.execute(plan, analyze=True, query_text=text.strip())
+            return self.last_profile
+        if analyze:
+            plan = sql_to_plan(text, catalog=cat, optimize=optimize)
+            return self.execute(plan, analyze=True, query_text=text.strip())
         return run_sql(text, self, catalog=cat, optimize=optimize)
 
-    def accelerate(self, wire_plan, registry=None):
+    def accelerate(self, wire_plan, registry=None, analyze: bool = False):
         """The drop-in front door: execute a serialized Substrait-style plan.
 
         ``wire_plan`` is what an external host engine hands over — the wire
@@ -581,14 +794,64 @@ class SiriusEngine:
         from ..substrait import HybridRouter, ingest
 
         plan = ingest(wire_plan)
-        result, report = HybridRouter(self, registry).execute(plan)
+        t0 = time.perf_counter()
+        result, report = HybridRouter(self, registry).execute(plan,
+                                                              analyze=analyze)
         if not isinstance(result, _Table):
             # host-rooted plan: the result itself crosses back to device
             result = _Table.from_pydict(result)
             self.buffers.account_boundary_to_device(result.nbytes)
             report["boundary_to_device_bytes"] += result.nbytes
         self.last_accelerate_report = report
+        if analyze:
+            self.last_profile = self._merge_fragment_profiles(
+                report, plan, time.perf_counter() - t0)
         return result
+
+    def _merge_fragment_profiles(self, report: dict, plan: Rel,
+                                 total_seconds: float) -> QueryProfile:
+        """Stitch per-fragment profiles from an analyzed ``accelerate`` run
+        into one ``QueryProfile``.  Device fragments contribute their full
+        per-operator pipelines (sources prefixed ``frag<N>:``); host
+        fragments appear as a single opaque operator — the numpy oracle has
+        no operator-level clock."""
+        from .plan import explain
+        pipelines: List[PipelineProfile] = []
+        compile_s = 0.0
+        metrics: Dict[str, float] = {}
+        for frag in report["fragments"]:
+            prof = frag.pop("_profile", None)
+            fid = frag["fid"]
+            if prof is not None:
+                compile_s += prof.compile_seconds
+                for k, v in prof.metrics.items():
+                    metrics[k] = metrics.get(k, 0) + v
+                for p in prof.pipelines:
+                    pipelines.append(PipelineProfile(
+                        len(pipelines), f"frag{fid}:{p.source}", [],
+                        list(p.operators)))
+            else:
+                rec = PipelineProfile(len(pipelines), f"frag{fid}:host", [])
+                rec.operators.append(OperatorProfile(
+                    "HostFragment", "other", 0,
+                    int(frag.get("rows_out", 0)),
+                    float(frag.get("seconds", 0.0))))
+                pipelines.append(rec)
+        totals: Dict[str, float] = {}
+        for p in pipelines:
+            for op in p.operators:
+                totals[op.category] = totals.get(op.category, 0.0) + op.seconds
+        compile_s = min(max(compile_s, 0.0), total_seconds)
+        return QueryProfile(
+            query=None,
+            engine={"accelerate": True,
+                    "use_kernels": self.backend is not None,
+                    "compile_pipelines": self.executor.compile_pipelines},
+            total_seconds=float(total_seconds),
+            compile_seconds=float(compile_s),
+            execute_seconds=float(max(total_seconds - compile_s, 0.0)),
+            pipelines=pipelines, operator_totals=totals, metrics=metrics,
+            plan=explain(plan), fragments=list(report["fragments"]))
 
     def execute_with_fallback(self, plan: Rel):
         """Run on the accelerator engine; on failure, degrade to the host path."""

@@ -1,4 +1,4 @@
-"""Host-transfer accounting: prove the data path stays device-resident.
+"""Host-transfer + sync accounting: prove the data path stays device-resident.
 
 Sirius's core bet is that columns never round-trip through host memory
 mid-query.  This module makes that claim *testable*: ``track_transfers``
@@ -12,6 +12,17 @@ scalar-subquery planning.
 Scalar syncs (``int(x)``/``bool(x)`` on device scalars — dynamic output
 sizes, eligibility bits) are deliberately *not* counted: they move O(1)
 bytes and are part of the eager-dispatch contract, not a data-path breach.
+
+A second always-on counter, ``sync_barriers``, counts the executor's
+explicit ``block_until_ready`` barriers.  The default async path issues
+exactly **one** per query (the final result materialization); profiling
+modes (``profile=True`` / ``analyze=True``) add opt-in per-operator
+barriers — the overhead-guard test asserts the delta is zero when
+profiling is off.
+
+Both counters are thread-safe (concurrent queries from ROADMAP item 2's
+serving layer increment them from many worker threads) and mirror into the
+process-wide ``observability.METRICS`` registry.
 """
 from __future__ import annotations
 
@@ -22,17 +33,58 @@ from typing import Iterator
 import jax
 import numpy as np
 
+from ..observability.metrics import METRICS
+
 
 class TransferCounter:
-    """Counts device→host column materializations (see module docstring)."""
+    """Counts device→host column materializations (see module docstring).
+
+    Increments are lock-protected: ``track_transfers`` may observe many
+    concurrent queries, and a torn ``+= 1`` would silently under-count —
+    the exact failure mode an instrumentation module exists to rule out.
+    """
 
     def __init__(self):
+        self._lock = threading.Lock()
         self.total = 0            # all np.asarray(jax.Array) calls
         self.in_pipeline = 0      # …of which inside pipeline execution
 
+    def record(self, in_pipeline: bool) -> None:
+        with self._lock:
+            self.total += 1
+            if in_pipeline:
+                self.in_pipeline += 1
+
     def reset(self) -> None:
-        self.total = 0
-        self.in_pipeline = 0
+        with self._lock:
+            self.total = 0
+            self.in_pipeline = 0
+
+
+class _SyncCounter:
+    """Thread-safe counter for the executor's explicit host barriers."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self) -> None:
+        with self._lock:
+            self._value += 1
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+
+sync_barriers = _SyncCounter()
+
+
+def count_sync() -> None:
+    """Record one explicit executor barrier (``jax.block_until_ready``)."""
+    sync_barriers.inc()
+    METRICS.counter("executor.sync_barriers").inc()
 
 
 _local = threading.local()
@@ -52,25 +104,35 @@ def pipeline_scope() -> Iterator[None]:
         _local.pipeline_depth = _depth() - 1
 
 
+_patch_lock = threading.Lock()
+
+
 @contextlib.contextmanager
 def track_transfers() -> Iterator[TransferCounter]:
     """Count device→host materializations until the context exits.
 
     Patches ``np.asarray`` process-wide (tests and benchmarks only — not a
-    production mode); nesting is not supported.
+    production mode); nesting is not supported, and concurrent entry from
+    two threads is serialized by a module lock so the unpatch never
+    clobbers a live patch.  Counts mirror into ``METRICS`` under
+    ``instrument.transfers.total`` / ``instrument.transfers.in_pipeline``.
     """
     counter = TransferCounter()
-    orig = np.asarray
+    with _patch_lock:
+        orig = np.asarray
 
-    def counting_asarray(a, *args, **kwargs):
-        if isinstance(a, jax.Array):
-            counter.total += 1
-            if _depth() > 0:
-                counter.in_pipeline += 1
-        return orig(a, *args, **kwargs)
+        def counting_asarray(a, *args, **kwargs):
+            if isinstance(a, jax.Array):
+                in_pipe = _depth() > 0
+                counter.record(in_pipe)
+                METRICS.counter("instrument.transfers.total").inc()
+                if in_pipe:
+                    METRICS.counter("instrument.transfers.in_pipeline").inc()
+            return orig(a, *args, **kwargs)
 
-    np.asarray = counting_asarray
+        np.asarray = counting_asarray
     try:
         yield counter
     finally:
-        np.asarray = orig
+        with _patch_lock:
+            np.asarray = orig

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..observability.metrics import METRICS
 from ..relational.aggregate import AggSpec, factorize_groups
 from ..relational.expressions import Between, BinOp, Col, Expr, Lit, evaluate
 from ..relational.table import BOOL, DATE, NUMERIC, STRING, Column, Table
@@ -114,6 +115,7 @@ class KernelBackend:
         hi = jnp.asarray([c[2] for c in conjuncts], jnp.float32)
         idx, count = kops.filter_select(mat, lo, hi, interpret=self.interpret)
         self.filter_hits += 1
+        METRICS.counter("kernel.filter_hits").inc()
         return t.take(idx[: int(count)])
 
     # -- hash-probe join --------------------------------------------------------
@@ -148,6 +150,7 @@ class KernelBackend:
         p32 = kops.map_probe_keys_jit(s, pk.astype(jnp.int64))
         row, found = kops.hash_probe(p32, sk, sr, interpret=self.interpret)
         self.probe_hits += 1
+        METRICS.counter("kernel.probe_hits").inc()
         if how == "mark":
             return probe.with_column("__mark", Column(found, BOOL))
         if how == "semi":
@@ -252,4 +255,5 @@ class KernelBackend:
                 out[a.name] = Column(res, col.kind,
                                      col.dictionary if col.kind == STRING else None)
         self.agg_hits += 1
+        METRICS.counter("kernel.agg_hits").inc()
         return Table(out)

@@ -36,12 +36,14 @@ Mechanics:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ops as kops
+from ..observability.metrics import METRICS
 from ..relational.expressions import Expr, evaluate
 from ..relational.table import BOOL, DATE, NUMERIC, Column, Table
 
@@ -210,11 +212,47 @@ class _CompiledRegion:
         self.out_meta = None              # recorded at trace time
         self.failed = False
         self.dict_refs: List = []         # pins dictionary ids for the cache key
+        self.cost = None                  # lazy HLO cost summary (analyze mode)
+        self._costing = False
         self.jitted = jax.jit(self._run)
+
+    def cost_summary(self, arrays, valid, aux) -> dict:
+        """Estimated FLOPs/bytes of this region's compiled XLA program.
+
+        Lowers + compiles the region once more through the AOT path (the
+        jit execution cache keeps the hot path untouched), then runs the
+        roofline's HLO analyses over the optimized text: loop-corrected
+        matmul FLOPs (``launch.hlo_analysis.dot_flops``) maxed with XLA's
+        own ``cost_analysis`` flops, plus the HBM bytes-accessed estimate.
+        Computed lazily — only ``analyze=True`` asks — and cached per
+        region, so each signature pays the extra compile once.
+        """
+        if self.cost is None:
+            from ..launch.hlo_analysis import (
+                hbm_traffic_estimate, loop_corrected_flops,
+            )
+            try:
+                self._costing = True
+                compiled = self.jitted.lower(arrays, valid, aux).compile()
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                ca = dict(ca or {})
+                flops = loop_corrected_flops(
+                    compiled.as_text(), float(ca.get("flops", 0.0)))["flops"]
+                self.cost = {"est_flops": float(flops),
+                             "est_bytes": float(hbm_traffic_estimate(ca))}
+            except Exception:  # noqa: BLE001 — cost estimation must never fail a query
+                self.cost = {}
+            finally:
+                self._costing = False
+        return self.cost
 
     def _run(self, arrays, valid, aux):
         # runs at trace time only; execution replays the compiled XLA program
-        self.compiler.stats["traces"] += 1
+        if not self._costing:          # cost-analysis relower is not a trace
+            self.compiler.stats["traces"] += 1
+            METRICS.counter("pipeline_compiler.traces").inc()
         t = Table({name: Column(arr, kind, dct)
                    for (name, kind, dct), arr in zip(self.in_meta, arrays)})
         ai = 0
@@ -241,6 +279,16 @@ class FusedSegment:
         self.items = items
         self.eager_ops = eager_ops        # fallback path (same semantics)
         self.aux = tuple(aux)
+        # per-call telemetry for the analyze path: FusedSegments are built
+        # fresh for every pipeline execution (see ``prepare``), so stashing
+        # the last call's region/args here is race-free
+        self.last_call_info: Optional[dict] = None
+
+    def describe(self) -> str:
+        kinds = {"_FusedFilter": "filter", "_FusedSelect": "select",
+                 "_FusedProject": "project", "_FusedProbe": "probe"}
+        return "FusedRegion[" + "+".join(
+            kinds.get(type(i).__name__, "?") for i in self.items) + "]"
 
     def _eager(self, t: Table) -> Table:
         for op in self.eager_ops:
@@ -250,6 +298,7 @@ class FusedSegment:
     def __call__(self, t: Table) -> Table:
         sig = (tuple(i.signature() for i in self.items), _table_signature(t))
         region = self.compiler.cache.get(sig)
+        cache_hit = region is not None
         if region is None:
             in_meta = tuple((n, c.kind, c.dictionary)
                             for n, c in t.columns.items())
@@ -260,9 +309,12 @@ class FusedSegment:
                 d for item in self.items if isinstance(item, _FusedProbe)
                 for _, d in item._dicts()]
             self.compiler.cache[sig] = region
+            METRICS.counter("pipeline_compiler.cache_misses").inc()
         else:
             self.compiler.stats["cache_hits"] += 1
+            METRICS.counter("pipeline_compiler.cache_hits").inc()
         if region.failed:
+            self.last_call_info = {"cache_hit": cache_hit, "degraded": True}
             return self._eager(t)
 
         n = t.num_rows
@@ -270,11 +322,26 @@ class FusedSegment:
         arrays = tuple(_pad(c.data, b) for c in t.columns.values())
         valid = jnp.arange(b) < n
         try:
-            out_arrays, count = region.jitted(arrays, valid, self.aux)
+            if cache_hit:
+                out_arrays, count = region.jitted(arrays, valid, self.aux)
+            else:
+                # first call on a fresh region dispatches the trace+compile
+                # synchronously — its wall clock IS the compile cost
+                t0 = time.perf_counter()
+                out_arrays, count = region.jitted(arrays, valid, self.aux)
+                dt = time.perf_counter() - t0
+                self.compiler.stats["trace_seconds"] += dt
+                METRICS.histogram("pipeline_compiler.trace_seconds").observe(dt)
         except Exception:  # noqa: BLE001 — degrade, never fail the query
             region.failed = True
+            self.last_call_info = {"cache_hit": cache_hit, "degraded": True}
             return self._eager(t)
         self.compiler.stats["region_calls"] += 1
+        METRICS.counter("pipeline_compiler.region_calls").inc()
+        self.last_call_info = {
+            "cache_hit": cache_hit, "degraded": False, "region": region,
+            "cost_args": (arrays, valid, self.aux),
+        }
         k = int(count)                     # the region's single scalar sync
         return Table({
             name: Column(arr[:k], kind, dct)
@@ -292,7 +359,7 @@ class PipelineCompiler:
     def __init__(self):
         self.cache: Dict[Tuple, _CompiledRegion] = {}
         self.stats = {"traces": 0, "cache_hits": 0, "region_calls": 0,
-                      "fused_probes": 0, "eager_ops": 0}
+                      "fused_probes": 0, "eager_ops": 0, "trace_seconds": 0.0}
 
     # -- probe eligibility + device-side build ------------------------------
     def _lower_probe(self, op, backend) -> Optional[_FusedProbe]:
@@ -351,6 +418,7 @@ class PipelineCompiler:
                             backend.interpret if backend is not None else True)
         fused._aux = (table, build_arrays)
         self.stats["fused_probes"] += 1
+        METRICS.counter("pipeline_compiler.fused_probes").inc()
         return fused
 
     def prepare(self, ops: Sequence, backend=None) -> List:
@@ -388,6 +456,7 @@ class PipelineCompiler:
                 flush()
                 segments.append(op)
                 self.stats["eager_ops"] += 1
+                METRICS.counter("pipeline_compiler.eager_ops").inc()
             else:
                 run_items.append(lowered)
                 run_ops.append(op)

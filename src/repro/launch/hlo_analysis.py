@@ -160,7 +160,11 @@ _DOT_LINE_RE = re.compile(r"=\s*.*?\bdot\(")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
                      r"(?:\()?(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
-_DOT_ARGS_RE = re.compile(r"\bdot\(\s*%?([\w\.\-]+)\s*,\s*%?([\w\.\-]+)")
+# operands may carry an inline `f32[64,128]{1,0}` type prefix (newer HLO
+# emitters) or be a bare `%name` reference — accept both
+_OPERAND = (r"(?:(?:pred|[sufbc]\d+|bf16)\[[\d,]*\]"
+            r"(?:\{[\d,]*\})?\s+)?%?([\w\.\-]+)")
+_DOT_ARGS_RE = re.compile(r"\bdot\(\s*" + _OPERAND + r"\s*,\s*" + _OPERAND)
 
 
 def dot_flops(hlo: str) -> float:

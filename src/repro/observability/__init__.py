@@ -1,0 +1,33 @@
+"""Query-telemetry subsystem: spans, metrics, per-operator profiles.
+
+The paper's cost-efficiency claims (8.3x TPC-H) are *per-operator*
+arguments; this package makes every regression and every win attributable
+to a named operator, compile step, cache or transfer — the DuckDB
+``EXPLAIN ANALYZE`` / ``PRAGMA enable_profiling='json'`` loop rebuilt for
+the device-resident engine.
+
+Three pieces (DESIGN.md §12):
+
+* ``tracer``  — nested context-manager **spans** (thread-safe, near-zero
+  cost when disabled) for ad-hoc wall-clock attribution;
+* ``metrics`` — a process-wide **registry** of counters/gauges/histograms
+  that absorbs the scattered ad-hoc instrumentation (compiler cache
+  hits/misses, kernel-vs-fallback hits, host-transfer counts, buffer
+  byte ledgers, hybrid-fragment placement, distributed timers);
+* ``profile`` — the **QueryProfile** record assembled per query under
+  ``engine.sql(q, analyze=True)`` / ``EXPLAIN ANALYZE``: per-operator and
+  per-fused-region wall time, rows in/out, compile-vs-execute split,
+  cache/kernel/transfer stats, versioned JSON export and profile diffing.
+"""
+from .metrics import METRICS, MetricsRegistry
+from .profile import (
+    PROFILE_SCHEMA_VERSION, OperatorProfile, PipelineProfile, ProfileBuilder,
+    QueryProfile, diff_profiles, validate_profile,
+)
+from .tracer import TRACER, Span, SpanTracer
+
+__all__ = [
+    "METRICS", "MetricsRegistry", "OperatorProfile", "PROFILE_SCHEMA_VERSION",
+    "PipelineProfile", "ProfileBuilder", "QueryProfile", "Span", "SpanTracer",
+    "TRACER", "diff_profiles", "validate_profile",
+]

@@ -22,6 +22,10 @@ Entry points (this module):
     a ``FallbackEngine``, or a host-format dict-of-dicts.
   * ``explain_sql(sql, catalog=None)`` — naive and optimized plans side by
     side with cardinality annotations (the EXPLAIN observability loop).
+  * ``EXPLAIN ANALYZE <query>`` — recognized as a prefix by ``run_sql`` and
+    ``SiriusEngine.sql``; runs the query with per-operator telemetry and
+    returns the ``QueryProfile`` (see ``repro.observability``) instead of
+    rows.
 
 ``Catalog`` supplies table schemas, row estimates and (optionally, via
 ``Catalog.with_dictionaries``) string dictionaries for the optimizer's
@@ -30,6 +34,7 @@ the ClickBench catalog comes from ``repro.data.clickbench``.
 """
 from __future__ import annotations
 
+import re
 from typing import Optional, Union
 
 from ..core.plan import Rel, explain
@@ -39,9 +44,13 @@ from .lower import lower_select
 from .parser import parse_sql
 
 __all__ = [
-    "Catalog", "SqlError", "explain_sql", "parse_sql", "run_sql",
-    "sql_to_plan", "sql_to_wire", "tokenize",
+    "Catalog", "EXPLAIN_ANALYZE_RE", "SqlError", "explain_sql", "parse_sql",
+    "run_sql", "sql_to_plan", "sql_to_wire", "tokenize",
 ]
+
+# ``EXPLAIN ANALYZE`` is an entry-point prefix, not grammar: the statement
+# after it parses unchanged, so the lexer/parser never see the keywords.
+EXPLAIN_ANALYZE_RE = re.compile(r"^\s*explain\s+analyze\b", re.IGNORECASE)
 
 
 def sql_to_plan(sql: str, catalog: Optional[Catalog] = None,
@@ -104,9 +113,17 @@ def run_sql(sql: str, db, catalog: Optional[Catalog] = None,
             ``SiriusEngine.sql``, which also attaches the loaded tables'
             dictionaries for dictionary-informed stats.
         optimize: run the optimizer passes before executing.
+
+    ``EXPLAIN ANALYZE <query>`` prefixes delegate to ``db.sql`` (engines
+    that support profiling) and return the ``QueryProfile``.
     """
     from ..core.fallback import FallbackEngine
 
+    if EXPLAIN_ANALYZE_RE.match(sql):
+        if hasattr(db, "sql"):
+            return db.sql(sql, catalog=catalog, optimize=optimize)
+        raise SqlError("EXPLAIN ANALYZE requires a profiling engine "
+                       "(SiriusEngine); got " + type(db).__name__)
     plan = sql_to_plan(sql, catalog, optimize)
     if isinstance(db, dict):
         return FallbackEngine(db).execute(plan)

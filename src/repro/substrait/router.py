@@ -21,11 +21,13 @@ on the device.  This module reproduces that split for ingested plans:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.plan import (
     HYBRID_BOUNDARY_PREFIX, ReadRel, Rel, explain, walk_deep,
 )
+from ..observability.metrics import METRICS
 from ..relational.table import Table
 from .registry import DEFAULT_REGISTRY, CapabilityRegistry
 
@@ -107,20 +109,27 @@ class HybridRouter:
         return dev / total if total else 1.0
 
     # -- execution ---------------------------------------------------------
-    def execute(self, plan: Rel) -> Tuple[Any, Dict[str, Any]]:
+    def execute(self, plan: Rel,
+                analyze: bool = False) -> Tuple[Any, Dict[str, Any]]:
         """Run ``plan`` hybrid.  Returns (result, report): the result is a
         device ``Table`` when the root fragment ran on device, a host dict
         otherwise; the report carries fragment placements and boundary
-        traffic."""
+        traffic.  With ``analyze=True`` each fragment entry also gets its
+        wall-clock ``seconds`` and ``rows_out``, and device fragments carry
+        their per-operator ``QueryProfile`` under ``"_profile"`` (popped by
+        ``SiriusEngine.accelerate`` when it merges the combined profile)."""
         from ..core.fallback import FallbackEngine
 
         fragments = self.plan_fragments(plan)
         buffers = self.engine.buffers
         results: Dict[int, Any] = {}
+        frag_info: Dict[int, Dict[str, Any]] = {}
         temp_names: List[str] = []
         to_host_bytes = to_device_bytes = 0
         try:
             for frag in fragments:
+                METRICS.counter(f"router.{frag.placement}_fragments").inc()
+                t_frag = time.perf_counter()
                 if frag.placement == "device":
                     for d in frag.deps:
                         dep = results[d]
@@ -131,7 +140,11 @@ class HybridRouter:
                         name = _boundary_name(d)
                         buffers.cache_table(name, dep)
                         temp_names.append(name)
-                    out: Any = self.engine.executor.execute(frag.plan)
+                    out: Any = self.engine.executor.execute(frag.plan,
+                                                            analyze=analyze)
+                    if analyze:
+                        frag_info[frag.fid] = {
+                            "_profile": self.engine.executor.last_profile}
                 else:
                     host_tables = dict(self.engine.host_tables)
                     for d in frag.deps:
@@ -152,6 +165,12 @@ class HybridRouter:
                             host_tables[rel.table] = dev.to_host()
                     out = FallbackEngine(host_tables).execute(frag.plan)
                 results[frag.fid] = out
+                if analyze:
+                    info = frag_info.setdefault(frag.fid, {})
+                    info["seconds"] = time.perf_counter() - t_frag
+                    info["rows_out"] = (
+                        out.num_rows if isinstance(out, Table)
+                        else len(next(iter(out.values()), [])))
         finally:
             for name in temp_names:
                 buffers.drop(name)
@@ -159,8 +178,9 @@ class HybridRouter:
         device_rels = sum(f.rel_count for f in fragments
                           if f.placement == "device")
         report = {
-            "fragments": [{"fid": f.fid, "placement": f.placement,
-                           "rels": f.rel_count, "deps": list(f.deps)}
+            "fragments": [dict({"fid": f.fid, "placement": f.placement,
+                                "rels": f.rel_count, "deps": list(f.deps)},
+                               **frag_info.get(f.fid, {}))
                           for f in fragments],
             "device_fragments": sum(1 for f in fragments
                                     if f.placement == "device"),

@@ -74,8 +74,9 @@ def f(x):
         return c + jax.lax.psum((x * i).sum(), 'data'), None
     out, _ = jax.lax.scan(body, 0.0, jnp.arange(6.0))
     return out
-g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P('data'), out_specs=P(),
-                          check_vma=False))
+from jax.experimental.shard_map import shard_map
+g = jax.jit(shard_map(f, mesh=mesh, in_specs=P('data'), out_specs=P(),
+                      check_rep=False))
 c = g.lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
 cb = collective_bytes(c.as_text())
 # psum of f32 scalar: 4 bytes x2 (AR) x6 trips = 48

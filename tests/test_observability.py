@@ -1,0 +1,370 @@
+"""EXPLAIN ANALYZE / observability subsystem: spans, metrics, profiles.
+
+The contracts under test:
+  * span tracer — nesting, thread-safety, near-zero no-op when disabled;
+  * metrics registry — concurrent increments are exact;
+  * TransferCounter — no torn counts under concurrent queries;
+  * QueryProfile — versioned schema-stable JSON (golden key sets for
+    Q1/Q6/Q13, monotonic timings, rows exact), per-operator times summing
+    to <= total wall time, fused regions carrying HLO cost estimates;
+  * overhead guard — analyze=False keeps the one-sync-per-query contract
+    (the counter that proves profiling is opt-in);
+  * row-exactness — analyze=True returns bit-identical results on all 22
+    TPC-H + 15 ClickBench golden queries;
+  * profile_diff — a synthetic slowdown makes the CLI exit nonzero and
+    name the offending operator.
+"""
+import json
+import subprocess
+import sys
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import instrument
+from repro.core.executor import SiriusEngine
+from repro.data import clickbench as cb
+from repro.data.tpch_queries import QUERIES
+from repro.observability import (
+    METRICS, MetricsRegistry, QueryProfile, SpanTracer, diff_profiles,
+    validate_profile,
+)
+from repro.observability.profile import _OP_KEYS, _PIPELINE_KEYS, _TOP_KEYS
+
+from conftest import USE_KERNELS, assert_tables_equal
+
+CB_ROWS = 10_000
+
+
+@pytest.fixture(scope="module")
+def cb_engine():
+    eng = SiriusEngine(use_kernels=USE_KERNELS)
+    cb.load_into_engine(eng, cb.generate(CB_ROWS))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def cb_catalog():
+    return cb.clickbench_catalog(CB_ROWS)
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_tracer_nests_and_records():
+    tr = SpanTracer()
+    tr.enable()
+    with tr.span("query", category="executor") as q:
+        with tr.span("pipeline", category="executor") as p:
+            p.set(rows=42)
+        q.set(qid=6)
+    done = tr.finished()
+    names = [s.name for s in done]
+    assert names == ["pipeline", "query"]          # children finish first
+    pipeline, query = done
+    assert pipeline.parent is query
+    assert pipeline.attrs == {"rows": 42}
+    assert query.attrs == {"qid": 6}
+    assert pipeline.seconds >= 0 and query.seconds >= pipeline.seconds
+
+
+def test_span_tracer_disabled_is_noop():
+    tr = SpanTracer()                              # disabled by default
+    with tr.span("x") as s:
+        s.set(ignored=True)                        # must not raise
+    assert tr.finished() == []
+
+
+def test_span_tracer_thread_stacks_are_independent():
+    tr = SpanTracer()
+    tr.enable()
+    errors = []
+
+    def worker(i):
+        try:
+            with tr.span(f"w{i}"):
+                with tr.span(f"w{i}-inner") as inner:
+                    assert inner.parent.name == f"w{i}"
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(tr.finished()) == 16
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + transfer counter thread safety
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_concurrent_increments_are_exact():
+    reg = MetricsRegistry()
+    n_threads, n_incs = 16, 500
+
+    def worker():
+        c = reg.counter("test.hits")
+        for _ in range(n_incs):
+            c.inc()
+        reg.histogram("test.lat").observe(0.5)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["test.hits"] == n_threads * n_incs
+    assert snap["test.lat.count"] == n_threads
+    assert snap["test.lat.sum"] == pytest.approx(0.5 * n_threads)
+    delta = MetricsRegistry.delta({"test.hits": 1000}, snap)
+    assert delta["test.hits"] == n_threads * n_incs - 1000
+
+
+def test_transfer_counter_concurrent_queries_no_torn_counts():
+    """Concurrent device→host materializations must count exactly —
+    a torn ``+= 1`` is the regression this test exists to catch."""
+    arr = jnp.arange(16)
+    n_threads, n_calls = 8, 200
+    with instrument.track_transfers() as counter:
+        def worker():
+            for _ in range(n_calls):
+                np.asarray(arr)
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert counter.total == n_threads * n_calls
+    assert counter.in_pipeline == 0
+
+
+# ---------------------------------------------------------------------------
+# QueryProfile schema goldens (Q1 / Q6 / Q13)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qid", [1, 6, 13])
+def test_profile_schema_golden(qid, tpch_engine):
+    result = tpch_engine.execute(QUERIES[qid](), analyze=True,
+                                 query_text=f"tpch q{qid}")
+    prof = tpch_engine.last_profile
+    d = prof.to_dict()
+    assert validate_profile(d) == []
+    # golden key sets — schema stability, not exact timings
+    assert tuple(sorted(d)) == tuple(sorted(_TOP_KEYS))
+    for p in d["pipelines"]:
+        assert tuple(sorted(p)) == tuple(sorted(_PIPELINE_KEYS))
+        for op in p["operators"]:
+            assert tuple(sorted(op)) == tuple(sorted(_OP_KEYS))
+    assert d["schema_version"] == 1
+    # monotonic timings
+    assert d["total_seconds"] > 0
+    assert 0 <= d["compile_seconds"] <= d["total_seconds"]
+    op_sum = sum(op["seconds"] for p in d["pipelines"]
+                 for op in p["operators"])
+    assert 0 < op_sum <= d["total_seconds"] * 1.001
+    # the final sink's output cardinality is the query's result cardinality
+    final_sink = d["pipelines"][-1]["operators"][-1]
+    assert final_sink["rows_out"] == result.num_rows
+    # per-query metrics deltas carry the schema-stable counter families
+    for key in ("compiler.traces", "kernel.filter_hits",
+                "buffers.cold_copy_bytes", "executor.sync_barriers",
+                "strings.host_passes"):
+        assert key in d["metrics"], f"missing metric family {key}"
+
+
+def test_profile_json_roundtrip(tpch_engine):
+    tpch_engine.execute(QUERIES[6](), analyze=True)
+    prof = tpch_engine.last_profile
+    restored = QueryProfile.from_json(prof.to_json())
+    assert restored.to_json() == prof.to_json()
+    text = prof.pretty()
+    assert "EXPLAIN ANALYZE" in text
+    assert "pipeline 0" in text
+
+
+def test_fused_region_reports_cost_estimates(tpch_engine):
+    """Compiled regions must surface HLO cost analysis (est_flops /
+    est_bytes) into their profile entry — the healed hlo_analysis wiring."""
+    tpch_engine.execute(QUERIES[3]())              # warm/compile
+    tpch_engine.execute(QUERIES[3](), analyze=True)
+    d = tpch_engine.last_profile.to_dict()
+    fused = [op for p in d["pipelines"] for op in p["operators"]
+             if op["category"] == "fused"]
+    assert fused, "expected at least one fused region in Q3's profile"
+    costed = [op for op in fused if "est_flops" in op["attrs"]]
+    assert costed, "no fused region reported est_flops"
+    for op in costed:
+        assert op["attrs"]["est_flops"] > 0
+        assert op["attrs"]["est_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# overhead guard: analyze=False keeps one-sync-per-query
+# ---------------------------------------------------------------------------
+
+
+def test_default_path_adds_zero_extra_syncs(tpch_engine):
+    plan = QUERIES[6]()
+    tpch_engine.execute(plan)                      # warm: compile regions
+    before = instrument.sync_barriers.value
+    for _ in range(3):
+        tpch_engine.execute(plan)
+    assert instrument.sync_barriers.value - before == 3, \
+        "analyze=False must issue exactly one barrier per query"
+    # and the analyzed run of the same plan issues *more* (opt-in syncs)
+    before = instrument.sync_barriers.value
+    tpch_engine.execute(plan, analyze=True)
+    assert instrument.sync_barriers.value - before > 1
+
+
+# ---------------------------------------------------------------------------
+# row-exactness: all 22 TPC-H + 15 ClickBench golden queries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("qid", sorted(QUERIES))
+def test_analyze_row_exact_tpch(qid, tpch_engine):
+    plain = tpch_engine.execute(QUERIES[qid]()).to_host()
+    analyzed = tpch_engine.execute(QUERIES[qid](), analyze=True).to_host()
+    assert_tables_equal(analyzed, plain)
+    assert validate_profile(tpch_engine.last_profile.to_dict()) == []
+
+
+@pytest.mark.parametrize("qid", sorted(cb.CLICKBENCH_QUERIES))
+def test_analyze_row_exact_clickbench(qid, cb_engine, cb_catalog):
+    sql = cb.CLICKBENCH_QUERIES[qid]
+    plain = cb_engine.sql(sql, catalog=cb_catalog).to_host()
+    analyzed = cb_engine.sql(sql, catalog=cb_catalog, analyze=True).to_host()
+    assert_tables_equal(analyzed, plain)
+    assert validate_profile(cb_engine.last_profile.to_dict()) == []
+
+
+# ---------------------------------------------------------------------------
+# SQL frontend: EXPLAIN ANALYZE
+# ---------------------------------------------------------------------------
+
+
+Q6_SQL = ("select sum(l_extendedprice * l_discount) as revenue from lineitem "
+          "where l_shipdate >= date '1994-01-01' "
+          "and l_shipdate < date '1995-01-01' "
+          "and l_discount between 0.05 and 0.07 and l_quantity < 24")
+
+
+def test_explain_analyze_sql_returns_profile(tpch_engine):
+    prof = tpch_engine.sql("EXPLAIN ANALYZE " + Q6_SQL)
+    assert isinstance(prof, QueryProfile)
+    assert prof is tpch_engine.last_profile
+    assert validate_profile(prof.to_dict()) == []
+    assert prof.query.startswith("select sum")
+    # case-insensitive, whitespace-tolerant prefix
+    prof2 = tpch_engine.sql("  explain   analyze " + Q6_SQL)
+    assert isinstance(prof2, QueryProfile)
+
+
+def test_run_sql_explain_analyze_requires_engine(tpch_db):
+    from repro.sql import SqlError, run_sql
+    with pytest.raises(SqlError, match="EXPLAIN ANALYZE"):
+        run_sql("EXPLAIN ANALYZE " + Q6_SQL, tpch_db)
+
+
+def test_sql_analyze_kwarg_returns_rows_and_profile(tpch_engine):
+    out = tpch_engine.sql(Q6_SQL, analyze=True)
+    ref = tpch_engine.sql(Q6_SQL)
+    assert_tables_equal(out.to_host(), ref.to_host())
+    assert isinstance(tpch_engine.last_profile, QueryProfile)
+
+
+# ---------------------------------------------------------------------------
+# profile diffing
+# ---------------------------------------------------------------------------
+
+
+def _mini_profile(sink_seconds: float) -> dict:
+    return {
+        "schema_version": 1, "query": "q", "engine": {},
+        "total_seconds": 0.01 + sink_seconds, "compile_seconds": 0.0,
+        "execute_seconds": 0.01 + sink_seconds,
+        "pipelines": [{"pid": 0, "source": "scan:lineitem", "deps": [],
+                       "operators": [
+                           {"name": "scan:lineitem", "category": "scan",
+                            "rows_in": 100, "rows_out": 100,
+                            "seconds": 0.01, "attrs": {}},
+                           {"name": "AggSink", "category": "groupby",
+                            "rows_in": 100, "rows_out": 1,
+                            "seconds": sink_seconds, "attrs": {}}]}],
+        "operator_totals": {"scan": 0.01, "groupby": sink_seconds},
+        "metrics": {}, "plan": "", "fragments": [],
+    }
+
+
+def test_diff_profiles_flags_synthetic_slowdown():
+    old, new = _mini_profile(0.004), _mini_profile(0.100)
+    assert validate_profile(old) == [] and validate_profile(new) == []
+    regressions, report = diff_profiles(old, new)
+    assert regressions, "25x sink slowdown must regress"
+    assert any("AggSink" in r for r in regressions)
+    # same profile → clean
+    assert diff_profiles(old, old) == ([], [])
+
+
+def test_profile_diff_cli_exits_nonzero_and_names_operator(tmp_path):
+    old, new = _mini_profile(0.004), _mini_profile(0.100)
+    pa, pb = tmp_path / "old.json", tmp_path / "new.json"
+    pa.write_text(json.dumps(old))
+    pb.write_text(json.dumps(new))
+    proc = subprocess.run(
+        [sys.executable, "scripts/profile_diff.py", str(pa), str(pb)],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "REGRESSION" in proc.stdout and "AggSink" in proc.stdout
+    clean = subprocess.run(
+        [sys.executable, "scripts/profile_diff.py", str(pa), str(pa)],
+        capture_output=True, text=True, timeout=120)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+
+def test_validate_profile_rejects_drift():
+    d = _mini_profile(0.004)
+    d["surprise"] = 1
+    assert any("unknown top-level" in e for e in validate_profile(d))
+    d2 = _mini_profile(0.004)
+    del d2["metrics"]
+    assert any("missing top-level" in e for e in validate_profile(d2))
+    d3 = _mini_profile(0.004)
+    d3["pipelines"][0]["operators"][0]["category"] = "mystery"
+    assert any("unknown category" in e or "mystery" in e
+               for e in validate_profile(d3))
+    d4 = _mini_profile(0.004)
+    d4["pipelines"][0]["operators"][0]["seconds"] = 99.0
+    assert any("sum" in e for e in validate_profile(d4))
+
+
+# ---------------------------------------------------------------------------
+# hybrid accelerate(analyze=True)
+# ---------------------------------------------------------------------------
+
+
+def test_accelerate_analyze_merges_fragment_profiles(tpch_engine):
+    from repro.sql import sql_to_wire
+    wire = sql_to_wire(Q6_SQL)
+    out = tpch_engine.accelerate(wire, analyze=True)
+    prof = tpch_engine.last_profile
+    assert isinstance(prof, QueryProfile)
+    assert validate_profile(prof.to_dict()) == []
+    assert prof.fragments, "accelerate profile must carry fragment entries"
+    for frag in prof.fragments:
+        assert "_profile" not in frag            # popped during the merge
+        assert frag["seconds"] >= 0
+    assert prof.engine.get("accelerate") is True
+    assert out.num_rows == 1
