@@ -30,13 +30,23 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
     fb = FallbackEngine(db)
 
     rows = []
+    cold = {}
     for qid in sorted(QUERIES):
-        # hot run: first execution warms caches/compilations, then measure
+        # cold run: parse-free plan, but pays lowering + region traces +
+        # scalar syncs and records the executable plan.  Its wall time and
+        # trace/compile attribution are kept (satellite of the warm-path
+        # work: compile cost lands on the query that incurred it) — the
+        # timed repeats below replay the plan cache, which is the
+        # steady-state number the paper's warm path argues for.
+        t0 = time.perf_counter()
         eng.execute(QUERIES[qid]())
+        cold[qid] = {"cold_s": time.perf_counter() - t0,
+                     "compile_s": eng.executor.last_compile_seconds}
         t0 = time.perf_counter()
         for _ in range(repeats):
             eng.execute(QUERIES[qid]())
         t_eng = (time.perf_counter() - t0) / repeats
+        cold[qid]["plan_cache_hit"] = eng.executor.last_plan_cache_hit
 
         fb.execute(QUERIES[qid]())
         t0 = time.perf_counter()
@@ -73,15 +83,24 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
         router = HybridRouter(eng)
         frac = {qid: router.device_fragment_fraction(QUERIES[qid]())
                 for qid in sorted(QUERIES)}
-        kernel_hits = (eng.backend.hit_counts()
-                       if eng.backend is not None else {})
-        if eng.backend is None:
-            keng = SiriusEngine(use_kernels=True)
-            load_into_engine(keng, db)
-            for qid in (1, 3, 6):
-                keng.execute(QUERIES[qid]())
-            kernel_hits = keng.backend.hit_counts()
-            kernel_hits["sampled_queries"] = [1, 3, 6]
+        # kernel-tier coverage: run EVERY query once on a fresh use_kernels
+        # engine and record the per-query kernel-route hit deltas (filter /
+        # probe / agg / expand / topk).  A fresh engine keeps attribution
+        # honest — its plan cache is cold, so prepare-time probe lowering
+        # counts too.  Interpret-mode kernels are exact but slow on
+        # CPU-only containers, so this stays out of the timed path.
+        keng = SiriusEngine(use_kernels=True)
+        load_into_engine(keng, db)
+        kernel_hits = {"per_query": {}}
+        for qid in sorted(QUERIES):
+            before = keng.backend.hit_counts()
+            fb_before = keng.executor.fallback_queries
+            keng.execute(QUERIES[qid]())
+            after = keng.backend.hit_counts()
+            kernel_hits["per_query"][f"q{qid}"] = dict(
+                {k: after[k] - before[k] for k in after},
+                fallback=keng.executor.fallback_queries - fb_before)
+        kernel_hits["totals"] = keng.backend.hit_counts()
         # per-query EXPLAIN ANALYZE profiles, embedded so profile_diff.py
         # can attribute any BENCH regression to the operator that moved.
         # Collected after the timing loops (the analyze barriers must never
@@ -99,12 +118,19 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
             "cold_load_s": round(cold_load_s, 4),
             "queries": {f"q{qid}": {"engine_s": round(t_eng, 6),
                                     "host_s": round(t_fb, 6),
+                                    "cold_s": round(cold[qid]["cold_s"], 6),
+                                    "compile_s_cold":
+                                        round(cold[qid]["compile_s"], 6),
+                                    "plan_cache_hit":
+                                        cold[qid]["plan_cache_hit"],
                                     "device_fragment_fraction": frac[qid],
                                     "profile": profiles[f"q{qid}"]}
                         for qid, t_eng, t_fb in rows},
             "total_engine_s": round(tot_e, 6),
             "total_host_s": round(tot_f, 6),
+            "total_cold_s": round(sum(c["cold_s"] for c in cold.values()), 6),
             "kernel_hits": kernel_hits,
+            "plan_cache": dict(eng.executor.plan_cache.stats),
             "fallback_queries": eng.executor.fallback_queries,
             "compiler": dict(eng.compiler.stats),
         }

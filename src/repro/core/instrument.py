@@ -10,8 +10,18 @@ from legitimate ones at the result boundary (``Table.to_host``) or during
 scalar-subquery planning.
 
 Scalar syncs (``int(x)``/``bool(x)`` on device scalars — dynamic output
-sizes, eligibility bits) are deliberately *not* counted: they move O(1)
-bytes and are part of the eager-dispatch contract, not a data-path breach.
+sizes, eligibility bits) move O(1) bytes but each one still stalls host
+dispatch behind the device stream.  Since PR 7 they are *countable* and
+*replayable*: every dynamic-cardinality pull in the engine goes through
+``pull_scalar``, which (a) counts into ``scalar_syncs`` so the warm-path
+contract test can assert zero, and (b) participates in the executable-plan
+cache's record/replay protocol — a cold run records each pulled value; a
+warm run returns the recorded value *without syncing* and instead emits a
+device-side ``value != recorded`` flag that the executor folds into the
+query's single final sync (any mismatch invalidates the cache entry and
+re-executes cold).  Registered data is immutable between ``register()``
+calls — the cache is cleared on re-registration — so recorded cardinalities
+are exact for warm runs and the flags are a safety net, not a branch.
 
 A second always-on counter, ``sync_barriers``, counts the executor's
 explicit ``block_until_ready`` barriers.  The default async path issues
@@ -31,6 +41,7 @@ import threading
 from typing import Iterator
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..observability.metrics import METRICS
@@ -79,6 +90,7 @@ class _SyncCounter:
 
 
 sync_barriers = _SyncCounter()
+scalar_syncs = _SyncCounter()
 
 
 def count_sync() -> None:
@@ -88,6 +100,114 @@ def count_sync() -> None:
 
 
 _local = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# scalar pulls: counted, recordable, replayable (executable-plan cache)
+# ---------------------------------------------------------------------------
+
+
+class ReplayMismatch(Exception):
+    """A replayed execution diverged structurally from its recording.
+
+    Raised when a warm run performs more pulls than the cold run recorded —
+    control flow changed, so the cached dispatch schedule is stale.  (Value
+    divergence is detected lazily via device-side flags at the final sync,
+    not here.)  The executor invalidates the entry and re-runs cold."""
+
+
+class _ScalarCtx:
+    __slots__ = ("mode", "values", "pos", "flags")
+
+    def __init__(self, mode: str, values: list, flags: list = None):
+        self.mode = mode          # "record" | "replay"
+        self.values = values
+        self.pos = 0
+        self.flags = flags
+
+
+def _materialize(x):
+    return x.item() if hasattr(x, "item") else x
+
+
+def pull_scalar(x):
+    """Materialize a device scalar (dynamic row count, eligibility bit).
+
+    The one blessed gate for host↔device scalar pulls on the data path:
+
+    * **normal** — sync now (``.item()``), count into ``scalar_syncs`` /
+      ``executor.scalar_syncs`` when the value was actually on device;
+    * **record** (cold run under the plan cache) — sync, count, and append
+      the value to the active recording;
+    * **replay** (warm run) — return the recorded value *without syncing*;
+      the ``x != recorded`` comparison stays on device and is checked at
+      the query's final barrier.
+
+    Host-side inputs (python/numpy scalars) pass through uncounted.
+    """
+    ctx = getattr(_local, "scalar_ctx", None)
+    if ctx is not None and ctx.mode == "replay":
+        if ctx.pos >= len(ctx.values):
+            raise ReplayMismatch(
+                f"replay exhausted after {len(ctx.values)} recorded pulls")
+        v = ctx.values[ctx.pos]
+        ctx.pos += 1
+        if isinstance(x, jax.Array):
+            ctx.flags.append(jnp.reshape(x != v, ()))
+        elif _materialize(x) != v:
+            raise ReplayMismatch("host-side scalar diverged from recording")
+        return v
+    on_device = isinstance(x, jax.Array)
+    v = _materialize(x)
+    if on_device:
+        scalar_syncs.inc()
+        METRICS.counter("executor.scalar_syncs").inc()
+    if ctx is not None and ctx.mode == "record":
+        ctx.values.append(v)
+    return v
+
+
+@contextlib.contextmanager
+def scalar_recording(values: list) -> Iterator[None]:
+    """Append every ``pull_scalar`` value on this thread to ``values``."""
+    prev = getattr(_local, "scalar_ctx", None)
+    _local.scalar_ctx = _ScalarCtx("record", values)
+    try:
+        yield
+    finally:
+        _local.scalar_ctx = prev
+
+
+@contextlib.contextmanager
+def scalar_replay(values: list, flags: list) -> Iterator[None]:
+    """Serve ``pull_scalar`` calls from ``values`` without syncing.
+
+    Device-side ``!=`` verification flags accumulate into ``flags``; the
+    caller must fold them into its final barrier and treat any set flag as
+    a cache invalidation.  Raises ``ReplayMismatch`` (from ``pull_scalar``)
+    if the pull sequence outruns the recording."""
+    prev = getattr(_local, "scalar_ctx", None)
+    ctx = _ScalarCtx("replay", values, flags)
+    _local.scalar_ctx = ctx
+    try:
+        yield
+        if ctx.pos != len(values):
+            raise ReplayMismatch(
+                f"replay consumed {ctx.pos} of {len(values)} recorded pulls")
+    finally:
+        _local.scalar_ctx = prev
+
+
+@contextlib.contextmanager
+def pulls_suspended() -> Iterator[None]:
+    """Temporarily drop out of record/replay (insert-time-only code paths:
+    probe lowering, nested planning) so their pulls never join a schedule."""
+    prev = getattr(_local, "scalar_ctx", None)
+    _local.scalar_ctx = None
+    try:
+        yield
+    finally:
+        _local.scalar_ctx = prev
 
 
 def _depth() -> int:

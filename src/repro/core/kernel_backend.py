@@ -16,6 +16,11 @@ device-side reductions; no column is ever copied to host to decide):
                 date/bool) and sum/count/avg/min/max aggregates → the MXU
                 one-hot-matmul kernel (``groupby_sum`` / ``groupby_sum_large``)
                 for the additive aggregates, device segment ops for min/max.
+  * expand    — the eager join's run expansion (multi-match inner/left) →
+                the binary-search ``join_expand`` kernel; covers the joins
+                the unique-key probe kernel cannot.
+  * topk      — single-key ORDER BY + LIMIT over integer/date keys within
+                the f32-exact range → the tie-stable ``topk_select`` kernel.
 
 Numerical note for the MXU path: the kernel accumulates in f32, so each
 additive column is centered by its f64 mean before the matmul (the
@@ -37,6 +42,7 @@ from ..observability.metrics import METRICS
 from ..relational.aggregate import AggSpec, factorize_groups
 from ..relational.expressions import Between, BinOp, Col, Expr, Lit, evaluate
 from ..relational.table import BOOL, DATE, NUMERIC, STRING, Column, Table
+from .instrument import pull_scalar
 
 
 def _collect_range_conjuncts(e: Expr, out: List[Tuple[str, float, float]]) -> bool:
@@ -87,10 +93,13 @@ class KernelBackend:
         self.filter_hits = 0
         self.probe_hits = 0
         self.agg_hits = 0
+        self.expand_hits = 0
+        self.topk_hits = 0
 
     def hit_counts(self) -> dict:
         return dict(filter=self.filter_hits, probe=self.probe_hits,
-                    agg=self.agg_hits)
+                    agg=self.agg_hits, expand=self.expand_hits,
+                    topk=self.topk_hits)
 
     # -- fused range filter ---------------------------------------------------
     def try_filter(self, cond: Expr, t: Table) -> Optional[Table]:
@@ -106,8 +115,8 @@ class KernelBackend:
                 return None
             if t.num_rows:
                 # f32 lanes: only exact below 2^24 — device-side reduction,
-                # scalar sync only (never a column copy to host)
-                if float(jnp.max(jnp.abs(c.data))) >= 2**24:
+                # scalar pull only (never a column copy to host)
+                if pull_scalar(jnp.max(jnp.abs(c.data))) >= 2**24:
                     return None
             cols.append(c.data.astype(jnp.float32))
         mat = jnp.stack(cols, axis=1)
@@ -116,7 +125,7 @@ class KernelBackend:
         idx, count = kops.filter_select(mat, lo, hi, interpret=self.interpret)
         self.filter_hits += 1
         METRICS.counter("kernel.filter_hits").inc()
-        return t.take(idx[: int(count)])
+        return t.take(idx[: pull_scalar(count)])
 
     # -- hash-probe join --------------------------------------------------------
     def try_probe(self, probe: Table, build: Table, probe_keys, build_keys,
@@ -141,11 +150,11 @@ class KernelBackend:
         valid = jnp.arange(nb) < n
         s, _, ranks, dup, sentinel_hit = kops.sorted_build(
             kops.pad_rows(bk, nb), valid)
-        if bool(dup) or bool(sentinel_hit):
+        if pull_scalar(dup) or pull_scalar(sentinel_hit):
             return None
         b32 = jnp.where(valid, ranks, -1).astype(jnp.int32)
         sk, sr, placed = kops.build_table32(b32, valid)
-        if not bool(placed):
+        if not pull_scalar(placed):
             return None
         p32 = kops.map_probe_keys_jit(s, pk.astype(jnp.int64))
         row, found = kops.hash_probe(p32, sk, sr, interpret=self.interpret)
@@ -155,13 +164,13 @@ class KernelBackend:
             return probe.with_column("__mark", Column(found, BOOL))
         if how == "semi":
             sel, k = kops.compact(found)
-            return probe.take(sel[: int(k)])
+            return probe.take(sel[: pull_scalar(k)])
         if how == "anti":
             sel, k = kops.compact(~found)
-            return probe.take(sel[: int(k)])
+            return probe.take(sel[: pull_scalar(k)])
         # inner: gather matched probe rows + matched build rows
         sel, k = kops.compact(found)
-        sel = sel[: int(k)]
+        sel = sel[: pull_scalar(k)]
         out = {nm: c.take(sel) for nm, c in probe.columns.items()}
         bidx = row[sel]
         for nm, c in build.columns.items():
@@ -257,3 +266,64 @@ class KernelBackend:
         self.agg_hits += 1
         METRICS.counter("kernel.agg_hits").inc()
         return Table(out)
+
+    # -- join run expansion ----------------------------------------------------
+    def try_expand(self, order, lo, counts, counts_out, total: int):
+        """Route the eager join's run expansion to the Pallas kernel.
+
+        Called from ``relational.hash_join`` after match counting; the
+        contract is purely shape-level (int32-addressable rows/outputs), so
+        every multi-match inner/left join is kernel-eligible — the coverage
+        gap the unique-key probe kernel left open.
+        """
+        if total >= 2**31 or lo.shape[0] >= 2**31 or order.shape[0] >= 2**31:
+            return None
+        out = kops.join_expand(order, lo, counts, counts_out, total,
+                               interpret=self.interpret)
+        self.expand_hits += 1
+        METRICS.counter("kernel.expand_hits").inc()
+        return out
+
+    # -- top-k for ORDER BY + LIMIT --------------------------------------------
+    def try_topk(self, t: Table, keys, limit) -> Optional[Table]:
+        """Route an eligible ORDER BY + LIMIT to the top-k selection kernel.
+
+        Contract: integer-coded sort keys (numeric ints, dates, or string
+        dictionary codes — order-preserving, the same invariant the eager
+        lexsort leans on) packed into one composite rank whose range stays
+        f32-exact (the 2^24 bound the filter kernel uses), and a small k.
+        Tie-stable against the generic lexsort, so results are row-exact.
+        The per-key min/max pulls go through ``pull_scalar``, so warm
+        replays stay sync-free.
+        """
+        if limit is None or not (0 < limit <= 128) or not keys:
+            return None
+        if any(k.name not in t for k in keys):
+            return None
+        n = t.num_rows
+        if n <= limit:
+            return None
+        comps = []
+        total = 1
+        for k in keys:
+            c = t[k.name]
+            if c.data.dtype.kind not in "iu":
+                return None
+            lo = int(pull_scalar(jnp.min(c.data)))
+            hi = int(pull_scalar(jnp.max(c.data)))
+            span = hi - lo + 1
+            v = c.data - lo
+            if not k.ascending:
+                v = (span - 1) - v
+            comps.append((v, span))
+            total *= span
+            if total > 2**24:      # composite must stay exact in f32
+                return None
+        comp, _ = comps[0]
+        for v, span in comps[1:]:
+            comp = comp * span + v
+        idx = kops.topk_select(comp.astype(jnp.float32), limit,
+                               interpret=self.interpret)
+        self.topk_hits += 1
+        METRICS.counter("kernel.topk_hits").inc()
+        return t.take(idx)

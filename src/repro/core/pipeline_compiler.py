@@ -46,6 +46,7 @@ from ..kernels import ops as kops
 from ..observability.metrics import METRICS
 from ..relational.expressions import Expr, evaluate
 from ..relational.table import BOOL, DATE, NUMERIC, Column, Table
+from .instrument import pull_scalar
 
 _bucket = kops.bucket_size
 _pad = kops.pad_rows
@@ -279,6 +280,9 @@ class FusedSegment:
         self.items = items
         self.eager_ops = eager_ops        # fallback path (same semantics)
         self.aux = tuple(aux)
+        # the items half of the cache key never changes for this segment;
+        # rendering expression signatures per call was pure warm-path tax
+        self._items_sig = tuple(i.signature() for i in items)
         # per-call telemetry for the analyze path: FusedSegments are built
         # fresh for every pipeline execution (see ``prepare``), so stashing
         # the last call's region/args here is race-free
@@ -296,7 +300,7 @@ class FusedSegment:
         return t
 
     def __call__(self, t: Table) -> Table:
-        sig = (tuple(i.signature() for i in self.items), _table_signature(t))
+        sig = (self._items_sig, _table_signature(t))
         region = self.compiler.cache.get(sig)
         cache_hit = region is not None
         if region is None:
@@ -342,7 +346,7 @@ class FusedSegment:
             "cache_hit": cache_hit, "degraded": False, "region": region,
             "cost_args": (arrays, valid, self.aux),
         }
-        k = int(count)                     # the region's single scalar sync
+        k = pull_scalar(count)   # the region's single scalar pull
         return Table({
             name: Column(arr[:k], kind, dct)
             for (name, kind, dct), arr in zip(region.out_meta, out_arrays)})
@@ -384,29 +388,33 @@ class PipelineCompiler:
             # Pallas kernel path: the sorted ranks double as the int32
             # factorization the probe kernel wants
             s, order, ranks, dup, sentinel_hit = kops.sorted_build(bk_p, valid)
-            if bool(sentinel_hit) or (rel.how == "inner" and bool(dup)):
+            if pull_scalar(sentinel_hit) or (rel.how == "inner"
+                                             and pull_scalar(dup)):
                 return None
             b32 = jnp.where(valid, ranks, -1).astype(jnp.int32)
             sk, sr, placed = kops.build_table32(b32, valid)
-            if not bool(placed):
+            if not pull_scalar(placed):
                 return None
             mode, table = "kernel", (s, sk, sr)
             backend.probe_hits += 1
         else:
             lo, hi, _ = kops.key_bounds(bk_p, valid)
-            lo_i, hi_i = int(lo), int(hi)       # one sync for build metadata
+            # one pull pair for build metadata (prepare-time only; the plan
+            # cache replays prepared segments, never this lowering)
+            lo_i, hi_i = pull_scalar(lo), pull_scalar(hi)
             domain = _bucket(hi_i - lo_i + 1)
             if domain <= max(1 << 16, 8 * nb):
                 # dense key domain: sort-free direct-address build
                 slot, dup = kops.direct_build(bk_p, valid, lo, domain)
-                if rel.how == "inner" and bool(dup):
+                if rel.how == "inner" and pull_scalar(dup):
                     return None           # multi-match: eager join handles it
                 mode, table = "direct", (slot, lo)
             else:
                 # sparse keys: sorted binary-search build
                 s, order, ranks, dup, sentinel_hit = kops.sorted_build(
                     bk_p, valid)
-                if bool(sentinel_hit) or (rel.how == "inner" and bool(dup)):
+                if pull_scalar(sentinel_hit) or (rel.how == "inner"
+                                                 and pull_scalar(dup)):
                     return None
                 mode, table = "sorted", (s, order)
         build_meta = tuple((nm, c.kind, str(c.data.dtype), c.dictionary)

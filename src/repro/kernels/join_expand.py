@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: hash-join run expansion.
+
+The eager join's second stage (``relational.join._join_expand``) turns
+per-probe-row match runs into gather indices: output position ``j`` belongs
+to the probe row ``p`` whose run ``[starts[p], starts[p] + counts[p])``
+covers ``j``.  The jnp formulation leans on ``jnp.repeat`` (a host-lowered
+scatter pattern); this kernel is the device-native version widening the
+kernel tier's join coverage beyond unique-key probes: each grid step owns a
+tile of *output* positions and locates its probe row with a vectorized
+binary search over the run-start prefix sums — every search round is a
+dense VMEM gather + compare across the tile, no per-row control flow.
+
+Shapes are static: the caller buckets the output length (``total`` padded
+to a power of two) exactly like ``_join_expand``, so repeated executions
+replay one compiled program.  Tail positions past the true total resolve to
+the last run and are sliced/masked off by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+INT32_SENTINEL = 2147483647  # python int: kernels must not capture device constants
+
+
+def _iota(n: int) -> jnp.ndarray:
+    # 2D iota + squeeze: 1D iota fails to lower on real TPUs
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).squeeze(-1)
+
+
+def _kernel(starts_ref, lo_ref, counts_ref, probe_ref, pos_ref, matched_ref,
+            *, search_rounds: int, build_rows: int):
+    j = pl.program_id(0) * TILE + _iota(TILE)      # global output positions
+
+    def step(_, state):
+        low, high = state                 # invariant: starts[low] <= j
+        mid = (low + high) // 2
+        s = jnp.take(starts_ref[...], mid)
+        go_right = s <= j
+        low = jnp.where(go_right, mid, low)
+        high = jnp.where(go_right, high, mid)
+        return low, high
+
+    low = jnp.zeros((TILE,), jnp.int32)
+    high = jnp.full((TILE,), starts_ref.shape[0], jnp.int32)
+    low, _ = jax.lax.fori_loop(0, search_rounds, step, (low, high))
+
+    intra = j - jnp.take(starts_ref[...], low)
+    matched = jnp.take(counts_ref[...], low) > 0
+    pos = jnp.take(lo_ref[...], low) + intra
+    pos = jnp.where(matched, jnp.clip(pos, 0, max(build_rows - 1, 0)), 0)
+    probe_ref[...] = low
+    pos_ref[...] = pos
+    matched_ref[...] = matched
+
+
+@functools.partial(jax.jit, static_argnames=("total", "interpret"))
+def join_expand(order, lo, counts, counts_out, total: int,
+                interpret: bool = True):
+    """Expand match runs into gather indices (kernel-tier ``_join_expand``).
+
+    Same signature and semantics as ``relational.join._join_expand``:
+    ``total`` is the bucketed output length; returns
+    ``(probe_idx, build_idx, matched)`` of length ``total``, tail garbage
+    past the true output size included (the caller slices or masks).
+    """
+    n = lo.shape[0]
+    nb = order.shape[0]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts_out.dtype), jnp.cumsum(counts_out[:-1])])
+    n_pad = max(((n + TILE - 1) // TILE) * TILE, TILE)
+    # padded runs start past every real position, so the search never lands there
+    starts_p = jnp.full((n_pad,), INT32_SENTINEL, jnp.int32).at[:n].set(
+        starts.astype(jnp.int32))
+    lo_p = jnp.zeros((n_pad,), jnp.int32).at[:n].set(lo.astype(jnp.int32))
+    counts_p = jnp.zeros((n_pad,), jnp.int32).at[:n].set(
+        counts.astype(jnp.int32))
+    out_pad = max(((total + TILE - 1) // TILE) * TILE, TILE)
+    search_rounds = max(n_pad.bit_length(), 1)
+
+    probe_idx, pos, matched = pl.pallas_call(
+        functools.partial(_kernel, search_rounds=search_rounds,
+                          build_rows=nb),
+        grid=(out_pad // TILE,),
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i: (0,)),   # starts: whole, VMEM
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((out_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((out_pad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(starts_p, lo_p, counts_p)
+    build_idx = jnp.take(order, pos[:total].astype(jnp.int64))
+    return probe_idx[:total].astype(jnp.int64), build_idx, matched[:total]

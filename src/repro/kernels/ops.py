@@ -24,14 +24,16 @@ from .decode_attention import decode_attention
 from .filter_count import filter_mask_counts
 from .groupby_agg import groupby_sum
 from .hash_probe import build_table32, hash_probe
+from .join_expand import join_expand
+from .topk import topk_select
 
 __all__ = [
     "bucket_size", "build_table32", "compact", "decode_attention",
     "direct_build", "direct_lookup", "factorize_keys_int32",
     "factorize_keys_int32_device", "filter_mask_counts", "filter_select",
     "groupby_sum", "groupby_sum_large", "hash_probe", "hash_probe_int64",
-    "key_bounds", "map_probe_keys", "pad_rows", "sorted_build",
-    "sorted_lookup",
+    "join_expand", "key_bounds", "map_probe_keys", "pad_rows",
+    "sorted_build", "sorted_lookup", "topk_select",
 ]
 
 _GROUP_BUDGET = 4096  # VMEM accumulator rows per kernel call

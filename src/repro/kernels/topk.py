@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: tie-stable top-k for ORDER BY ... LIMIT.
+
+Order-by in analytical plans is almost always a small-k selection over a
+post-aggregation table (the paper's observation that sort never dominates),
+yet the generic path lexsorts the whole input.  This kernel widens the
+Pallas tier to that shape: each grid step owns a TILE of rows and selects
+its local k smallest ``(key, row)`` pairs with a fixed-round vectorized
+argmin loop — ties break toward the smallest original row index, matching
+``jnp.lexsort``'s stability so kernel results are row-exact against the
+generic sort.  A tiny jnp merge of the per-block candidates (num_blocks*k
+elements) picks the global winners.
+
+Keys are f32 (the backend enforces the same 2^24 integer-exactness bound as
+the filter kernel); descending orders negate keys on the way in.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+INT32_SENTINEL = 2147483647
+F32_INF = float("inf")
+
+
+def _iota(n: int) -> jnp.ndarray:
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).squeeze(-1)
+
+
+def _kernel(keys_ref, out_keys_ref, out_idx_ref, *, k: int, n: int):
+    base = pl.program_id(0) * TILE
+    idxs = base + _iota(TILE)
+    keys = keys_ref[...]
+    # padding rows never win
+    keys = jnp.where(idxs < n, keys, F32_INF)
+
+    def step(t, state):
+        keys_m, out_keys, out_idx = state
+        m = jnp.min(keys_m)
+        # smallest row index among the minimum keys: the stable tie-break
+        cand = jnp.where(keys_m == m, idxs, INT32_SENTINEL)
+        i = jnp.min(cand)
+        out_keys = jax.lax.dynamic_update_index_in_dim(out_keys, m, t, 0)
+        out_idx = jax.lax.dynamic_update_index_in_dim(out_idx, i, t, 0)
+        keys_m = jnp.where(idxs == i, F32_INF, keys_m)
+        return keys_m, out_keys, out_idx
+
+    out_keys = jnp.full((k,), F32_INF, jnp.float32)
+    out_idx = jnp.full((k,), INT32_SENTINEL, jnp.int32)
+    _, out_keys, out_idx = jax.lax.fori_loop(0, k, step,
+                                             (keys, out_keys, out_idx))
+    out_keys_ref[...] = out_keys
+    out_idx_ref[...] = out_idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_select(keys: jnp.ndarray, k: int, interpret: bool = True):
+    """Indices of the k smallest f32 keys, ties broken by row order.
+
+    Returns int32 row indices in ascending ``(key, row)`` order — exactly
+    the first k entries a stable ascending sort would produce.
+    """
+    n = keys.shape[0]
+    n_pad = max(((n + TILE - 1) // TILE) * TILE, TILE)
+    keys_p = jnp.full((n_pad,), F32_INF, jnp.float32).at[:n].set(
+        keys.astype(jnp.float32))
+    blocks = n_pad // TILE
+    cand_keys, cand_idx = pl.pallas_call(
+        functools.partial(_kernel, k=k, n=n),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks * k,), jnp.float32),
+            jax.ShapeDtypeStruct((blocks * k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys_p)
+    # global merge over num_blocks*k candidates (tiny): stable (key, row)
+    order = jnp.lexsort((cand_idx, cand_keys))
+    return cand_idx[order[:k]]

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.instrument import pull_scalar
 from .expressions import Expr, evaluate
 from .table import BOOL, DATE, NUMERIC, STRING, Column, Table
 
@@ -85,13 +86,14 @@ def _group_key_arrays(table: Table, keys: Sequence[str]):
 def _dense_pack(arrs, n: int):
     """Pack int key columns into one dense id → (packed, domain) or None.
 
-    One device sync (the fused bounds reduce) decides eligibility."""
+    One scalar pull pair per key (the fused bounds reduce) decides
+    eligibility; recorded/replayed by the plan cache."""
     if not all(a.dtype.kind != "f" for a in arrs):
         return None
     limit = min(_DENSE_DOMAIN_LIMIT, max(1024, 4 * n))
     bounds = _key_bounds(tuple(arrs))
-    los = [int(b[0]) for b in bounds]
-    cards = [int(b[1]) - lo + 1 for b, lo in zip(bounds, los)]
+    los = [pull_scalar(b[0]) for b in bounds]
+    cards = [pull_scalar(b[1]) - lo + 1 for b, lo in zip(bounds, los)]
     domain = 1
     for card in cards:
         domain *= card
@@ -116,12 +118,12 @@ def factorize_groups(table: Table, keys: Sequence[str]) -> Tuple[jnp.ndarray, Ta
     dense = _dense_pack(arrs, n)
     if dense is not None:
         gids, rep, n_groups = _dense_factorize(*dense)
-        rep_idx = rep[: int(n_groups)]
+        rep_idx = rep[: pull_scalar(n_groups)]
         uniq = Table({k: table[k].take(rep_idx) for k in keys})
         return gids, uniq
 
     gids, rep, n_groups = _factorize_core(tuple(arrs))
-    rep_idx = rep[: int(n_groups)]          # the factorization's scalar sync
+    rep_idx = rep[: pull_scalar(n_groups)]  # the factorization's scalar pull
     uniq = Table({k: table[k].take(rep_idx) for k in keys})
     return gids, uniq
 
@@ -244,7 +246,7 @@ def group_aggregate(
         # dense keys: factorization + reductions fused, a single host sync
         _, results, rep, ng = _dense_aggregate_core(
             dense[0], tuple(datas), tuple(fns), dense[1])
-        k = int(ng)
+        k = pull_scalar(ng)
         rep_idx = rep[:k]
         uniq = Table({key: table[key].take(rep_idx) for key in keys})
         results = tuple(r[:k] for r in results)
@@ -254,7 +256,7 @@ def group_aggregate(
         if arrs is not None:
             # key arrays (and the dense bounds check) already computed above
             gids, rep, ng = _factorize_core(tuple(arrs))
-            n_groups = int(ng)
+            n_groups = pull_scalar(ng)
             uniq = Table({key: table[key].take(rep[:n_groups])
                           for key in keys})
         else:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.instrument import pull_scalar
 from ..kernels import ops as kops
 from .table import BOOL, NUMERIC, STRING, Column, Table, unify_string_keys
 
@@ -36,12 +37,13 @@ from .table import BOOL, NUMERIC, STRING, Column, Table, unify_string_keys
 def _minmax(*arrays) -> Tuple[int, int]:
     """(min, max) over possibly-empty device arrays, as python ints.
 
-    A scalar sync per key column — metadata only, never a column transfer."""
+    A scalar pull per key column — metadata only, never a column transfer;
+    recorded/replayed by the plan cache so warm runs skip the sync."""
     lo, hi = 0, 0
     for a in arrays:
         if a.shape[0]:
-            lo = min(lo, int(a.min()))
-            hi = max(hi, int(a.max()))
+            lo = min(lo, pull_scalar(a.min()))
+            hi = max(hi, pull_scalar(a.max()))
     return lo, hi
 
 
@@ -52,8 +54,12 @@ def _as_int_keys(left: Column, right: Column) -> Tuple[jnp.ndarray, jnp.ndarray]
     l = jnp.asarray(left.data)
     r = jnp.asarray(right.data)
     if l.dtype.kind == "f" or r.dtype.kind == "f":
-        # factorize floats exactly via unique over the union (device-side)
-        uni = jnp.unique(jnp.concatenate([l, r]))
+        # factorize floats exactly via unique over the union (device-side);
+        # static ``size`` + top-of-range fill keeps the padded array sorted
+        # (ranks unchanged) and the whole path jit-traceable for the plan
+        # cache's compiled replay
+        both = jnp.concatenate([l, r])
+        uni = jnp.unique(both, size=both.shape[0], fill_value=jnp.inf)
         l = jnp.searchsorted(uni, l)
         r = jnp.searchsorted(uni, r)
     return l.astype(jnp.int64), r.astype(jnp.int64)
@@ -65,6 +71,10 @@ def combine_keys(
     """Pack multi-column join keys into one int64 key per row (exact)."""
     assert len(probe_cols) == len(build_cols) and probe_cols
     pk, bk = _as_int_keys(probe_cols[0], build_cols[0])
+    if len(probe_cols) == 1:
+        # sort-merge matching and the open-addressing hash are sign-agnostic:
+        # single-key joins need no normalization, hence zero metadata pulls
+        return pk, bk
     base_min, _ = _minmax(pk, bk)
     pk, bk = pk - base_min, bk - base_min
     for pc, bc in zip(probe_cols[1:], build_cols[1:]):
@@ -74,8 +84,11 @@ def combine_keys(
         card = mx - m + 1
         _, hi = _minmax(pk, bk)
         if hi * card > 2**62:
-            # re-factorize to dense ranks to avoid overflow
-            uni = jnp.unique(jnp.concatenate([pk, bk]))
+            # re-factorize to dense ranks to avoid overflow (static size +
+            # max-int fill: sorted padding, traceable under jit)
+            both = jnp.concatenate([pk, bk])
+            uni = jnp.unique(both, size=both.shape[0],
+                             fill_value=jnp.iinfo(jnp.int64).max)
             pk = jnp.searchsorted(uni, pk)
             bk = jnp.searchsorted(uni, bk)
         pk = pk * card + p2
@@ -153,6 +166,7 @@ def hash_join(
     build_keys: Sequence[str],
     how: str = "inner",
     mark_name: str = "__mark",
+    backend=None,
 ) -> Table:
     """Join ``probe`` against ``build``.
 
@@ -160,6 +174,11 @@ def hash_join(
     ``left`` adds a ``__matched`` BOOL column; build columns of unmatched rows
     are garbage (gathered at index 0) and must be guarded by ``__matched``.
     ``mark`` returns the probe table + BOOL ``mark_name`` column (EXISTS / IN).
+
+    The dynamic output size is a ``pull_scalar`` — counted on cold runs,
+    replayed sync-free by the executable-plan cache on warm runs.  With a
+    kernel ``backend`` attached the run expansion routes to the Pallas
+    ``join_expand`` kernel (same bucketed shapes, same gather semantics).
     """
     if probe.num_rows == 0 or build.num_rows == 0:
         if probe.num_rows == 0 and how in ("inner", "left"):
@@ -181,10 +200,10 @@ def hash_join(
         return probe.with_column(mark_name, Column(counts > 0, BOOL))
     if how == "semi":
         sel, k = kops.compact(counts > 0)
-        return probe.take(sel[: int(k)])
+        return probe.take(sel[: pull_scalar(k)])
     if how == "anti":
         sel, k = kops.compact(counts == 0)
-        return probe.take(sel[: int(k)])
+        return probe.take(sel[: pull_scalar(k)])
 
     if how == "left":
         counts_out = jnp.maximum(counts, 1)
@@ -193,13 +212,20 @@ def hash_join(
     else:
         raise ValueError(f"unknown join type {how}")
 
-    # dynamic output size: the single scalar sync of the eager join.  The
-    # expansion runs compiled with the output padded to a bucket, so repeat
-    # executions replay cached programs.
-    total = int(counts_out.sum())
+    # dynamic output size: the single scalar pull of the eager join
+    # (recorded cold / replayed sync-free warm).  The expansion runs
+    # compiled with the output padded to a bucket, so repeat executions
+    # replay cached programs.
+    total = pull_scalar(counts_out.sum())
     t_pad = kops.bucket_size(total)
-    probe_idx, build_idx, matched = _join_expand(order, lo, counts,
-                                                 counts_out, t_pad)
+    probe_idx = build_idx = matched = None
+    if backend is not None:
+        expanded = backend.try_expand(order, lo, counts, counts_out, t_pad)
+        if expanded is not None:
+            probe_idx, build_idx, matched = expanded
+    if probe_idx is None:
+        probe_idx, build_idx, matched = _join_expand(order, lo, counts,
+                                                     counts_out, t_pad)
     probe_idx = probe_idx[:total]
     build_idx = build_idx[:total]
 
@@ -213,6 +239,67 @@ def hash_join(
     if how == "left":
         out["__matched"] = Column(matched[:total], BOOL)
     return Table(out)
+
+
+def hash_join_bounded(
+    probe: Table,
+    build: Table,
+    probe_keys: Sequence[str],
+    build_keys: Sequence[str],
+    capacity: int,
+    how: str = "inner",
+) -> Tuple[Table, jnp.ndarray, jnp.ndarray]:
+    """Sync-free inner/left join under a conservative cardinality cap.
+
+    The stats-layer ``capacity`` (an upper bound on the join's output
+    cardinality, e.g. ``optimizer.stats.estimate`` with headroom) replaces
+    the dynamic-size pull entirely: the output is allocated at the padded
+    cap, surviving rows are flagged by ``valid``, and ``overflow`` is a
+    device bool that is true iff the true match count exceeded ``capacity``
+    (rows were dropped — the caller must fall back to ``hash_join``).
+    Nothing here touches the host and all three return values are lazy
+    (multi-column keys are the one exception: packing them pulls per-column
+    min/max metadata scalars, recorded/replayed by the plan cache).
+
+    Returns ``(padded_table, valid_mask, overflow_flag)``; the padded table
+    has exactly ``bucket_size(capacity)`` rows.
+    """
+    if how not in ("inner", "left"):
+        raise ValueError(f"hash_join_bounded supports inner/left, got {how}")
+    if probe.num_rows == 0 or build.num_rows == 0:
+        joined = hash_join(probe, build, probe_keys, build_keys, how)
+        cap = kops.bucket_size(max(int(capacity), 1))
+        if joined.num_rows == 0:
+            out = {n: Column(jnp.zeros((cap,), c.data.dtype), c.kind,
+                             c.dictionary)
+                   for n, c in joined.columns.items()}
+        else:
+            pad = jnp.minimum(jnp.arange(cap), joined.num_rows - 1)
+            out = {n: c.take(pad) for n, c in joined.columns.items()}
+        valid = jnp.arange(cap) < joined.num_rows
+        return Table(out), valid, jnp.asarray(joined.num_rows > cap)
+
+    pk, bk = combine_keys([probe[k] for k in probe_keys],
+                          [build[k] for k in build_keys])
+    order, lo, counts = _join_match(pk, bk)
+    counts_out = jnp.maximum(counts, 1) if how == "left" else counts
+    total = counts_out.sum()
+    cap = kops.bucket_size(max(int(capacity), 1))
+    overflow = total > cap
+    probe_idx, build_idx, matched = _join_expand(order, lo, counts,
+                                                 counts_out, cap)
+    # rows past the true total are jnp.repeat tail fill: mask them out
+    valid = jnp.arange(cap) < total
+    out = {}
+    for name, col in probe.columns.items():
+        out[name] = col.take(probe_idx)
+    for name, col in build.columns.items():
+        if name in out:
+            continue
+        out[name] = col.take(build_idx)
+    if how == "left":
+        out["__matched"] = Column(matched, BOOL)
+    return Table(out), valid, overflow
 
 
 # ---------------------------------------------------------------------------

@@ -197,11 +197,12 @@ class Table:
         """Eager compaction (the libcudf apply_boolean_mask analogue).
 
         Device-side, via the jit-compiled ``kernels.ops.compact``: the
-        dynamic output size is the one scalar sync; selected indices and
-        the gather stay on device."""
+        dynamic output size is the one scalar pull (recorded/replayed by
+        the plan cache); selected indices and the gather stay on device."""
+        from ..core.instrument import pull_scalar
         from ..kernels import ops as kops
         idx, count = kops.compact(jnp.asarray(mask))
-        return self.take(idx[: int(count)])
+        return self.take(idx[: pull_scalar(count)])
 
     @staticmethod
     def concat(tables: Sequence["Table"]) -> "Table":

@@ -140,8 +140,18 @@ class HybridRouter:
                         name = _boundary_name(d)
                         buffers.cache_table(name, dep)
                         temp_names.append(name)
-                    out: Any = self.engine.executor.execute(frag.plan,
-                                                            analyze=analyze)
+                    executor = self.engine.executor
+                    # fragments that scan boundary temp tables must bypass
+                    # the executable-plan cache: the temp contents change
+                    # across accelerate() calls while the fragment's plan
+                    # signature stays identical
+                    prev_cache = executor.cache_enabled
+                    executor.cache_enabled = prev_cache and not frag.deps
+                    try:
+                        out: Any = executor.execute(frag.plan,
+                                                    analyze=analyze)
+                    finally:
+                        executor.cache_enabled = prev_cache
                     if analyze:
                         frag_info[frag.fid] = {
                             "_profile": self.engine.executor.last_profile}

@@ -188,3 +188,140 @@ def test_decode_attention_ignores_padded_tail():
     out2 = ops.decode_attention(q, k2, v2, jnp.asarray([100]))
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# join_expand (hash-join run expansion)
+# ---------------------------------------------------------------------------
+
+
+def _match_inputs(n_probe, n_build, key_range, seed):
+    """(order, lo, counts) exactly as relational._join_match computes them."""
+    rng = np.random.default_rng(seed)
+    pk = rng.integers(0, key_range, n_probe)
+    bk = rng.integers(0, key_range, n_build)
+    order = np.argsort(bk, kind="stable")
+    bs = bk[order]
+    lo = np.searchsorted(bs, pk, side="left")
+    counts = np.searchsorted(bs, pk, side="right") - lo
+    return (jnp.asarray(order), jnp.asarray(lo), jnp.asarray(counts))
+
+
+@pytest.mark.parametrize("n_probe,n_build,key_range", [
+    (1, 1, 1),            # single row, guaranteed match
+    (50, 30, 10),         # dense multi-match runs
+    (500, 700, 2000),     # sparse: many zero-count probes
+    (1500, 400, 40),      # output spans multiple TILE blocks
+])
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_join_expand_matches_jnp_reference(n_probe, n_build, key_range, how):
+    from repro.relational.join import _join_expand
+
+    order, lo, counts = _match_inputs(n_probe, n_build, key_range,
+                                      seed=n_probe + key_range)
+    counts_out = jnp.maximum(counts, 1) if how == "left" else counts
+    total = int(counts_out.sum())
+    t_pad = ops.bucket_size(max(total, 1))
+    got = ops.join_expand(order, lo, counts, counts_out, t_pad)
+    want = _join_expand(order, lo, counts, counts_out, t_pad)
+    for g, w, name in zip(got, want, ("probe_idx", "build_idx", "matched")):
+        # tail past the true total is unspecified in both paths: compare
+        # only the rows the caller keeps
+        np.testing.assert_array_equal(np.asarray(g)[:total],
+                                      np.asarray(w)[:total], err_msg=name)
+
+
+def test_join_expand_no_matches():
+    from repro.relational.join import _join_expand
+
+    order = jnp.asarray(np.argsort([5, 6, 7], kind="stable"))
+    lo = jnp.asarray(np.searchsorted([5, 6, 7], [0, 1, 2], side="left"))
+    counts = jnp.zeros((3,), jnp.int64)
+    counts_out = jnp.maximum(counts, 1)            # left join: passthrough
+    t_pad = ops.bucket_size(3)
+    got = ops.join_expand(order, lo, counts, counts_out, t_pad)
+    want = _join_expand(order, lo, counts, counts_out, t_pad)
+    np.testing.assert_array_equal(np.asarray(got[0])[:3],
+                                  np.asarray(want[0])[:3])
+    assert not np.asarray(got[2])[:3].any()
+
+
+# ---------------------------------------------------------------------------
+# topk_select (ORDER BY ... LIMIT)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 1000, 1024, 3000])
+@pytest.mark.parametrize("k", [1, 10, 128])
+def test_topk_select_matches_stable_sort(n, k):
+    if k > n:
+        pytest.skip("k must not exceed n")
+    rng = np.random.default_rng(n * 7 + k)
+    # small integer range forces cross-block ties: the stability stressor
+    keys = rng.integers(-50, 50, n).astype(np.float32)
+    got = ops.topk_select(jnp.asarray(keys), k)
+    want = np.argsort(keys, kind="stable")[:k]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_topk_select_all_equal_keys_is_row_stable():
+    keys = jnp.zeros((2500,), jnp.float32)
+    got = ops.topk_select(keys, 16)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(16))
+
+
+def test_backend_topk_routes_and_matches_sort():
+    from repro.core.kernel_backend import KernelBackend
+    from repro.relational.sort import SortKey, sort_table
+    from repro.relational.table import Table
+
+    rng = np.random.default_rng(13)
+    t = Table.from_pydict({"a": rng.integers(0, 100, 5000),
+                           "b": rng.normal(size=5000)})
+    backend = KernelBackend(interpret=True)
+    for ascending in (True, False):
+        keys = [SortKey("a", ascending)]
+        got = backend.try_topk(t, keys, 25)
+        assert got is not None, "eligible top-k must route to the kernel"
+        want = sort_table(t, keys, limit=25)
+        for name in t.columns:
+            np.testing.assert_allclose(np.asarray(got[name].data),
+                                       np.asarray(want[name].data))
+    assert backend.topk_hits == 2
+
+
+def test_backend_topk_multikey_and_string_codes_match_sort():
+    """Composite packing: mixed-direction multi-key (including dictionary
+    codes, which the eager lexsort also compares as raw ints) is row-exact."""
+    from repro.core.kernel_backend import KernelBackend
+    from repro.relational.sort import SortKey, sort_table
+    from repro.relational.table import STRING, Column, Table
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(29)
+    n = 4000
+    words = sorted({f"w{i:03d}" for i in range(40)})
+    t = Table(
+        {"c": Column(jnp.asarray(rng.integers(0, 50, n)), "numeric"),
+         "s": Column(jnp.asarray(rng.integers(0, len(words), n)), STRING,
+                     dictionary=list(words)),
+         "x": Column(jnp.asarray(rng.normal(size=n)), "numeric")})
+    backend = KernelBackend(interpret=True)
+    cases = [
+        [SortKey("c", False), SortKey("s", True)],      # desc count, asc word
+        [SortKey("s", True), SortKey("c", True)],
+        [SortKey("c", False), SortKey("s", False)],
+    ]
+    for keys in cases:
+        got = backend.try_topk(t, keys, 10)
+        assert got is not None, "multi-key int/dict sort must route"
+        want = sort_table(t, keys, limit=10)
+        for name in t.columns:
+            np.testing.assert_allclose(np.asarray(got[name].data),
+                                       np.asarray(want[name].data))
+    assert backend.topk_hits == len(cases)
+    # wide-range key blows the f32-exact composite bound: must decline
+    wide = Table({"c": t["c"],
+                  "big": Column(jnp.asarray(
+                      rng.integers(0, 2**30, n)), "numeric")})
+    assert backend.try_topk(wide, [SortKey("c"), SortKey("big")], 10) is None

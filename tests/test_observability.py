@@ -178,8 +178,10 @@ def test_profile_schema_golden(qid, tpch_engine):
     assert final_sink["rows_out"] == result.num_rows
     # per-query metrics deltas carry the schema-stable counter families
     for key in ("compiler.traces", "kernel.filter_hits",
+                "kernel.expand_hits", "kernel.topk_hits",
+                "plan_cache.hits", "plan_cache.replay_mismatches",
                 "buffers.cold_copy_bytes", "executor.sync_barriers",
-                "strings.host_passes"):
+                "executor.scalar_syncs", "strings.host_passes"):
         assert key in d["metrics"], f"missing metric family {key}"
 
 
