@@ -1,10 +1,15 @@
 """Table 2 analogue: distributed TPC-H with compute/exchange/other breakdown.
 
-Runs Q1/Q3/Q6 (the paper's distributed subset) + Q12 (ours) on an 8-shard
+Runs Q1/Q3/Q6 (the paper's distributed subset) + Q12 (ours) on an N-shard
 mesh in a subprocess (forced host devices), reporting the same three-way time
 decomposition as the paper — and reproducing its headline observation that
 exchange dominates Q3 while Q1/Q6 are coordinator/'other'-bound at small
-scale.
+scale.  Queries go through the generic ``run_plan`` path (exchange placement
++ fragment cutting), not hand-built programs.
+
+With ``json_path`` the per-query totals are merged into the BENCH json as a
+``"distributed"`` section, which ``scripts/profile_diff.py`` gates alongside
+the single-node profiles.
 """
 from __future__ import annotations
 
@@ -15,14 +20,14 @@ import sys
 
 _WORKER = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={shards}"
 import json, sys
 sys.path.insert(0, {src!r})
 from repro.core.distributed import DistributedEngine
 from repro.data.tpch import generate
 
 db = generate({sf})
-eng = DistributedEngine(db, n_shards=8)
+eng = DistributedEngine(db, n_shards={shards})
 out = []
 for qid in (1, 3, 6, 12):
     eng.run_query(qid)              # warm (compile)
@@ -35,10 +40,11 @@ print("RESULT " + json.dumps(out))
 """
 
 
-def run(scale_factor: float = 0.01):
+def run(scale_factor: float = 0.01, n_shards: int = 8,
+        json_path: str | None = None):
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
-    code = _WORKER.format(src=src, sf=scale_factor)
+    code = _WORKER.format(src=src, sf=scale_factor, shards=n_shards)
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
                           text=True, timeout=1800)
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
@@ -55,6 +61,21 @@ def run(scale_factor: float = 0.01):
     q3 = next(r for r in rows if r["qid"] == 3)
     print(f"dist_summary,0,q3_exchange_dominates="
           f"{q3['exchange'] > q3['compute']}")
+    if json_path:
+        data = {}
+        if os.path.exists(json_path):
+            with open(json_path) as f:
+                data = json.load(f)
+        data["distributed"] = {
+            "shards": n_shards,
+            "scale_factor": scale_factor,
+            "queries": {f"q{r['qid']}": {
+                k: r[k] for k in ("total", "compute", "exchange", "other")}
+                for r in rows},
+        }
+        with open(json_path, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path} (distributed section)")
     return rows
 
 

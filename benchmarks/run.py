@@ -9,7 +9,11 @@
   bench_kernels       Pallas kernel microbenches (interpret-mode, vs jnp ref)
 
 Prints ``name,us_per_call,derived`` CSV per section.
-Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...] [--shards N]
+
+``--shards N`` sizes the distributed mesh and records the per-query
+compute/exchange/other totals into BENCH_tpch.json's ``distributed``
+section (given alone it runs just the distributed section).
 """
 import sys
 import time
@@ -72,18 +76,28 @@ def bench_kernels():
 def main() -> None:
     from . import (bench_breakdown, bench_clickbench, bench_costmodel,
                    bench_distributed, bench_tpch_single, roofline)
+    argv = sys.argv[1:]
+    shards = None
+    if "--shards" in argv:
+        i = argv.index("--shards")
+        shards = int(argv[i + 1])
+        del argv[i:i + 2]
     sections = {
         "tpch_single": lambda: bench_tpch_single.run(
             json_path="BENCH_tpch.json"),
         "clickbench": lambda: bench_clickbench.run(
             json_path="BENCH_clickbench.json"),
         "breakdown": lambda: bench_breakdown.run(),
-        "distributed": lambda: bench_distributed.run(),
+        # --shards N sizes the mesh and records totals into BENCH_tpch.json
+        "distributed": lambda: bench_distributed.run(
+            n_shards=shards or 8,
+            json_path="BENCH_tpch.json" if shards else None),
         "costmodel": lambda: bench_costmodel.run(),
         "roofline": lambda: roofline.run(),
         "kernels": bench_kernels,
     }
-    wanted = sys.argv[1:] or list(sections)
+    # --shards N alone means "the distributed section, recorded"
+    wanted = argv or (["distributed"] if shards else list(sections))
     for name in wanted:
         _section(name)
         t0 = time.time()

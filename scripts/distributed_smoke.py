@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Distributed smoke: generic run_plan over a forced 4-device host mesh.
+
+Must run in its own process (sets XLA_FLAGS before importing jax): forces
+four host devices, builds the shard mesh, and runs a representative slice
+of both workloads through exchange placement → fragment cutting →
+shard_map collectives, checking row-exactness against the numpy oracle.
+
+Run:  PYTHONPATH=src python scripts/distributed_smoke.py [--shards N]
+                                                         [--sf SF] [-v]
+Exit status: 0 all queries match, 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+ap.add_argument("--shards", type=int, default=4)
+ap.add_argument("--sf", type=float, default=0.004)
+ap.add_argument("-v", "--verbose", action="store_true")
+ARGS = ap.parse_args()
+
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={ARGS.shards}")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.distributed import DistributedEngine  # noqa: E402
+from repro.core.fallback import FallbackEngine  # noqa: E402
+from repro.data import clickbench as cb  # noqa: E402
+from repro.data.tpch import generate  # noqa: E402
+from repro.data.tpch_queries import QUERIES  # noqa: E402
+from repro.sql import sql_to_plan  # noqa: E402
+
+TPCH_QIDS = (1, 3, 6, 12, 13, 18)       # agg, joins, exists/anti, group-top
+CLICKBENCH_QIDS = ("q1", "q8", "q12")   # filter-count, distinct, string group
+CB_ROWS = 2000
+
+
+def canon(v):
+    v = np.asarray(v)
+    if v.dtype.kind == "M":
+        return v.astype("datetime64[D]").astype("int64")
+    if v.dtype.kind in "UO":
+        return np.asarray(v, "U")
+    return v
+
+
+def tables_match(got, ref):
+    if set(got) != set(ref):
+        return False, f"columns {sorted(got)} vs {sorted(ref)}"
+    for k in got:
+        a, b = canon(got[k]), canon(ref[k])
+        if len(a) != len(b):
+            return False, f"{k}: rows {len(a)} vs {len(b)}"
+        if a.dtype.kind == "f" or b.dtype.kind == "f":
+            if not np.allclose(a.astype(float), b.astype(float),
+                               rtol=2e-5, atol=1e-6):
+                return False, f"{k}: values"
+        elif not (a == b).all():
+            return False, f"{k}: values"
+    return True, ""
+
+
+def main() -> int:
+    failures = []
+
+    db = generate(ARGS.sf)
+    fb = FallbackEngine(db)
+    eng = DistributedEngine(db, n_shards=ARGS.shards)
+    for qid in TPCH_QIDS:
+        got = eng.run_plan(QUERIES[qid]())
+        ref = fb.execute(QUERIES[qid]())
+        ok, why = tables_match(got, ref)
+        if ARGS.verbose or not ok:
+            print(f"tpch q{qid}: {'ok' if ok else 'MISMATCH ' + why} "
+                  f"({len(eng.program_names(qid))} fragments)")
+        if not ok:
+            failures.append(f"tpch q{qid}")
+
+    cdb = cb.generate(CB_ROWS)
+    cat = cb.clickbench_catalog(CB_ROWS)
+    cfb = FallbackEngine(cdb)
+    ceng = DistributedEngine(cdb, n_shards=ARGS.shards)
+    for qid in CLICKBENCH_QIDS:
+        plan = sql_to_plan(cb.CLICKBENCH_QUERIES[qid], catalog=cat)
+        got = ceng.run_plan(plan)
+        ref = cfb.execute(sql_to_plan(cb.CLICKBENCH_QUERIES[qid],
+                                      catalog=cat))
+        ok, why = tables_match(got, ref)
+        if ARGS.verbose or not ok:
+            print(f"clickbench {qid}: {'ok' if ok else 'MISMATCH ' + why}")
+        if not ok:
+            failures.append(f"clickbench {qid}")
+
+    n = len(TPCH_QIDS) + len(CLICKBENCH_QIDS)
+    if failures:
+        print(f"FAIL: {len(failures)}/{n} distributed queries mismatched: "
+              f"{failures}")
+        return 1
+    print(f"OK: {n} queries row-exact on a {ARGS.shards}-shard mesh")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

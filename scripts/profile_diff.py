@@ -25,6 +25,40 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 from repro.observability import diff_profiles, validate_profile  # noqa: E402
 
 
+def _load_distributed(path: str) -> dict:
+    """→ BENCH ``distributed`` section ({} when absent or not a BENCH file)."""
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    sec = d.get("distributed") if isinstance(d, dict) else None
+    return sec if isinstance(sec, dict) else {}
+
+
+def _diff_distributed(old: dict, new: dict, threshold: float,
+                      min_delta_ms: float):
+    """Gate the distributed per-query totals with the same two-sided rule
+    as operator phases (ratio AND absolute wall-delta)."""
+    regressions, report = [], []
+    shared = sorted(set(old.get("queries", {})) & set(new.get("queries", {})))
+    if old.get("shards") != new.get("shards") and shared:
+        report.append(f"note: shard counts differ "
+                      f"({old.get('shards')} vs {new.get('shards')}); "
+                      "totals not compared")
+        return regressions, report
+    for q in shared:
+        a = float(old["queries"][q].get("total", 0.0))
+        b = float(new["queries"][q].get("total", 0.0))
+        delta_ms = (b - a) * 1e3
+        line = (f"distributed {q}: total {a*1e3:.1f} ms -> {b*1e3:.1f} ms")
+        if a > 0 and b / a > threshold and delta_ms > min_delta_ms:
+            regressions.append(q)
+            line = "REGRESSION " + line + f" ({b/a:.2f}x)"
+        report.append(line)
+    return regressions, report
+
+
 def _load_profiles(path: str) -> dict:
     """→ {label: profile dict}.  Single-profile files get the label ''."""
     with open(path) as f:
@@ -95,6 +129,16 @@ def main(argv=None) -> int:
         print(f"{label}:")
         for line in report:
             print("  " + line)
+        any_regression |= bool(regressions)
+
+    # distributed BENCH entries: compared only when both files carry the
+    # section (CI perf-smoke regenerates BENCH files without it)
+    dist_old, dist_new = _load_distributed(args.old), _load_distributed(args.new)
+    if dist_old and dist_new:
+        regressions, report = _diff_distributed(
+            dist_old, dist_new, args.threshold, args.min_delta_ms)
+        for line in report:
+            print(line)
         any_regression |= bool(regressions)
 
     if any_regression:

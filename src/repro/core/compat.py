@@ -1,0 +1,93 @@
+"""jax API compatibility shims (0.4.x ⇄ newer-release surface drift).
+
+Two call-surface drifts broke the seed's distributed and model tests on
+jax 0.4.37:
+
+* ``jax.shard_map`` — promoted to the top-level namespace (with a
+  ``check_vma`` kwarg) only in newer releases; on 0.4.x it lives at
+  ``jax.experimental.shard_map.shard_map`` and the kwarg is ``check_rep``.
+* ``jax.sharding.get_abstract_mesh`` — newer releases track an ambient
+  abstract mesh; 0.4.x only exposes the thread-resources physical mesh.
+
+Every module that touches either API goes through this shim
+(``core.distributed``, ``exchange.service``, ``launch.sql_dryrun``,
+``models.layers``, ``models.lm``) so a jax upgrade is a one-file change.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable ``shard_map``.
+
+    Replication checking defaults to off: the exchange kernels return
+    per-shard buffers alongside psum'd scalars, a mix the static
+    replication checker cannot prove consistent.
+    """
+    if hasattr(jax, "shard_map"):  # newer jax: check_vma kwarg
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis (inside shard_map / pmap).
+
+    ``jax.lax.axis_size`` is a newer addition; 0.4.x spells it
+    ``psum(1, axis)``, which constant-folds to the static axis size.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``Compiled.cost_analysis()``.
+
+    0.4.x returns a one-element list of dicts (per device assignment);
+    newer jax returns the dict directly.  Always → a plain dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def get_abstract_mesh():
+    """Ambient mesh if one is active, else ``None``.
+
+    Callers treat ``None`` (or a mesh without their axis) as "constraints
+    are identity", so the 0.4.x fallback reports the thread-resources
+    physical mesh and maps the empty mesh to ``None``.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is None or getattr(mesh, "empty", False):
+            return None
+        return mesh
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - internal layout changed
+        return None
+    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+        return None
+    return mesh
+
+
+def set_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh.
+
+    Newer jax has ``jax.sharding.set_mesh``; on 0.4.x entering the mesh
+    context manager (without exiting) installs it into thread resources,
+    which is exactly where :func:`get_abstract_mesh` falls back to.
+    """
+    setter = getattr(jax.sharding, "set_mesh", None)
+    if setter is not None:
+        setter(mesh)
+        return
+    mesh.__enter__()

@@ -23,6 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import compat
+
 MIX64 = -7046029254386353131  # golden-ratio mix
 
 
@@ -70,7 +72,7 @@ def partition_hash(keys: jnp.ndarray, n_parts: int) -> jnp.ndarray:
 def shuffle(frame: Frame, keys: jnp.ndarray, axis: str, out_cap: int
             ) -> Tuple[Frame, jnp.ndarray]:
     """Hash-repartition rows by ``keys`` across the ``axis`` shards."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     dest = jnp.where(frame.valid, partition_hash(keys, n), n)
     return shuffle_by_dest(frame, dest, axis, out_cap)
 
@@ -85,8 +87,8 @@ def shuffle_hierarchical(frame: Frame, key_name: str, pod_axis: str,
     over pod×data shards.  ``key_name`` must be a frame column so the second
     stage can re-derive destinations after the first exchange.
     """
-    p = jax.lax.axis_size(pod_axis)
-    d = jax.lax.axis_size(data_axis)
+    p = compat.axis_size(pod_axis)
+    d = compat.axis_size(data_axis)
     g = partition_hash(frame.columns[key_name], p * d)
     fr, ov1 = shuffle_by_dest(frame, g // d, pod_axis, out_cap_pod)
     g2 = partition_hash(fr.columns[key_name], p * d) % d
@@ -104,7 +106,7 @@ def shuffle_by_dest(frame: Frame, dest: jnp.ndarray, axis: str, out_cap: int
     Returns (received frame, overflow count).  Invalid rows must carry
     dest >= n.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     cap = frame.capacity
     dest = jnp.where(frame.valid, dest, n)
 
@@ -143,7 +145,7 @@ def shuffle_by_dest(frame: Frame, dest: jnp.ndarray, axis: str, out_cap: int
 
 def broadcast(frame: Frame, axis: str) -> Frame:
     """All shards receive every shard's rows (build-side replication)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     cap = frame.capacity
     cols = {name: jax.lax.all_gather(col, axis, tiled=True)
             for name, col in frame.columns.items()}
@@ -163,7 +165,7 @@ def merge(frame: Frame, axis: str) -> Frame:
 def multicast(frame: Frame, axis: str, group_size: int) -> Frame:
     """Replicate rows within disjoint shard groups (paper's multi-cast)."""
     idx = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     full = broadcast(frame, axis)
     cap = frame.capacity
     group = idx // group_size
@@ -175,3 +177,15 @@ def multicast(frame: Frame, axis: str, group_size: int) -> Frame:
 
 def all_reduce_sum(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return jax.lax.psum(x, axis)
+
+
+def compiled_shard_map(fn, mesh, in_specs, out_specs):
+    """jit(shard_map(fn)) through the jax-version compat shim.
+
+    The one wrapper the distributed executor uses for every collective
+    step; replication checking stays off (exchange steps mix per-shard
+    buffers with psum'd overflow scalars).
+    """
+    from ..core.compat import shard_map as _compat_shard_map
+    return jax.jit(_compat_shard_map(fn, mesh, in_specs=in_specs,
+                                     out_specs=out_specs))

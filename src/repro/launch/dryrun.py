@@ -33,6 +33,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs.base import ArchConfig, Shape, all_configs, get_config  # noqa: E402
+from ..core import compat  # noqa: E402
 from .hlo_analysis import (  # noqa: E402
     collective_bytes, hbm_traffic_estimate, loop_corrected_flops,
 )
@@ -139,7 +140,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     b = shape.global_batch
     batch_struct = input_specs(cfg, shape)
 
-    jax.sharding.set_mesh(mesh)   # ambient mesh: activation constraints bind
+    compat.set_mesh(mesh)   # ambient mesh: activation constraints bind
     t0 = time.time()
     if shape.kind == "train":
         state_struct = jax.eval_shape(
@@ -202,7 +203,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
 
 def analyze(compiled, n_chips: int) -> dict:
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     flops = loop_corrected_flops(hlo, float(cost.get("flops", 0.0)))

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.static_ops import local_sort_agg, static_inner_join, static_semi_join, static_topk
+from ..core import compat
 from ..exchange.service import Frame, shuffle, shuffle_hierarchical
 from ..relational.table import date_to_days
 from .mesh import make_sql_mesh
@@ -149,11 +150,10 @@ def build_q3_fragment(multi_pod: bool, predicate_transfer: bool = False,
                 top.valid, ov1 + ov2)
 
     spec = P(("pod", "data")) if multi_pod else P("data")
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         fragment, mesh=mesh,
         in_specs=(spec,) * 6,
-        out_specs=(spec, spec, spec, spec, spec, P()),
-        check_vma=False))
+        out_specs=(spec, spec, spec, spec, spec, P())))
     args = (li, valid["lineitem"], oo, valid["orders"], cu,
             valid["customer"])
     return fn, args, {"n_shards": n_shards, "caps": caps,
@@ -195,9 +195,8 @@ def build_q1_fragment(multi_pod: bool):
         return partial
 
     spec = P(("pod", "data")) if multi_pod else P("data")
-    fn = jax.jit(jax.shard_map(fragment, mesh=mesh,
-                               in_specs=(spec, spec), out_specs=P(),
-                               check_vma=False))
+    fn = jax.jit(compat.shard_map(fragment, mesh=mesh,
+                                  in_specs=(spec, spec), out_specs=P()))
     return fn, (cols, vspec), {"n_shards": n_shards, "cap": c}
 
 

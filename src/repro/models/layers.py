@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import compat
 
 Params = Dict[str, jnp.ndarray]
 
@@ -30,7 +31,7 @@ def constrain(x: jnp.ndarray, *axes) -> jnp.ndarray:
     ('pod','data') axes).  Used to pin large intermediates (MoE dispatch
     buffers) that GSPMD propagation would otherwise replicate.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return x
     baxes = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
@@ -400,7 +401,7 @@ def _moe_groups(t: int) -> int:
     Grouped dispatch keeps every routing tensor local to its token group, so
     GSPMD shards the (G, E, C, d) buffers on G — the production-MoE layout;
     a flat global sort would force replicated scatters."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return 1
     n = 1

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import compat
 from . import layers as L
 
 
@@ -37,7 +38,7 @@ def _constrain_sp(x: jnp.ndarray) -> jnp.ndarray:
     jax.set_mesh) and S divides the model axis; otherwise identity — smoke
     tests and single-device runs are unaffected.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names or x.ndim != 3:
         return x
     m = mesh.shape["model"]

@@ -60,8 +60,8 @@ class RegistryCheckpointer:
             for cname, arr in entry["rows"].items():
                 key = f"{tname}::{cname}"
                 a = np.asarray(arr)
-                if a.dtype.kind in "UO":
-                    raise ValueError("registry stores encoded columns only")
+                if a.dtype.kind == "O":
+                    a = np.asarray(a, "U")   # npz stores unicode natively
                 arrays[key] = a
         save_npz(self._path(fragment), arrays, manifest)
 

@@ -18,6 +18,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import compat
+
 
 @dataclasses.dataclass
 class OptConfig:
@@ -106,7 +108,7 @@ def psum_compressed(grads, axis: str, error_state):
     Returns (mean-reduced grads, new error_state).  8x fewer exchange bytes
     than f32 psum, 2x fewer than bf16.
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
 
     def one(g, err):
         g32 = g.astype(jnp.float32) + err

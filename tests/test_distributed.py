@@ -16,9 +16,13 @@ WORKER = os.path.join(os.path.dirname(__file__), "_dist_worker.py")
 
 
 def run_scenario(name: str, timeout=900) -> dict:
+    src = os.path.join(os.path.dirname(os.path.dirname(WORKER)), "src")
+    env = dict(os.environ)   # propagate the parent env (kernel tier, etc.)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
     proc = subprocess.run(
         [sys.executable, WORKER, name],
-        capture_output=True, text=True, timeout=timeout,
+        capture_output=True, text=True, timeout=timeout, env=env,
         cwd=os.path.dirname(os.path.dirname(WORKER)) or ".",
     )
     assert proc.returncode == 0, f"worker failed:\n{proc.stderr[-3000:]}"
@@ -44,13 +48,46 @@ def test_node_failure_triggers_elastic_recovery():
 def test_straggler_speculative_reexecution():
     v = run_scenario("straggler_speculation")
     assert v["ok"], v
-    assert "q3_join" in v["speculated"]
+    assert v["speculated"], v
 
 
 @pytest.mark.slow
 def test_checkpoint_restart_resumes_after_last_fragment():
     v = run_scenario("checkpoint_resume")
     assert v["ok"], v
+    assert v["resumed_from"] == v["expected_resume"]
+
+
+@pytest.mark.slow
+def test_shuffle_overflow_retry_end_to_end():
+    """Real undersized exchange buckets (slack 0.2) overflow and converge."""
+    v = run_scenario("overflow_retry")
+    assert v["ok"], v
+    assert v["final_slack"] > 0.01
+
+
+@pytest.mark.slow
+def test_prime_sized_tables_partition_exactly():
+    """Row counts prime (coprime to the mesh): every pad-and-mask boundary
+    is uneven, results must still be row-exact."""
+    v = run_scenario("prime_rows")
+    assert v["ok"], v
+
+
+@pytest.mark.slow
+def test_tpch_sweep_distributed_row_exact():
+    """All 22 TPC-H queries through the generic run_plan path."""
+    v = run_scenario("sweep_tpch")
+    assert v["n_queries"] == 22
+    assert v["ok"], v["failures"]
+
+
+@pytest.mark.slow
+def test_clickbench_sweep_distributed_row_exact():
+    """All 15 ClickBench queries through the generic run_plan path."""
+    v = run_scenario("sweep_clickbench")
+    assert v["n_queries"] == 15
+    assert v["ok"], v["failures"]
 
 
 def test_shuffle_overflow_retries_with_bigger_buckets():
@@ -92,6 +129,48 @@ def test_np_partition_hash_matches_device_hash():
         a = np_partition_hash(keys, n)
         b = np.asarray(partition_hash(jnp.asarray(keys), n))
         assert (a == b).all(), n
+
+
+def test_key_to_int64_is_value_deterministic():
+    from repro.core.distributed import key_to_int64
+    # strings hash by value, independent of array order / dictionary codes
+    a = key_to_int64(np.array(["x", "abc", "x", ""], "U"))
+    b = key_to_int64(np.array(["abc", "", "x"], "U"))
+    assert a[1] == b[0] and a[0] == b[2] and a[3] == b[1]
+    assert a[0] == a[2]
+    # float -0.0 and 0.0 must land on the same partition
+    f = key_to_int64(np.array([0.0, -0.0]))
+    assert f[0] == f[1]
+    # dates become day numbers
+    d = key_to_int64(np.array(["1970-01-03"], "datetime64[D]"))
+    assert d[0] == 2
+
+
+def test_exchange_placement_cuts_stable_fragments():
+    from repro.data.tpch import generate
+    from repro.core.distributed import DistributedEngine
+
+    db = generate(0.002)
+    eng = DistributedEngine(db, n_shards=1)
+    names = eng.program_names(3)
+    assert len(names) >= 2                      # at least one exchange + root
+    assert names[-1].endswith("final")
+    assert names == eng.program_names(3)        # deterministic re-cut
+
+
+def test_registry_checkpoint_roundtrips_decoded_columns(tmp_path):
+    """Registry rows are decoded host columns — strings and dates must
+    survive a snapshot without pickling."""
+    from repro.runtime.checkpoint import RegistryCheckpointer
+    cp = RegistryCheckpointer(str(tmp_path))
+    reg = {"t": {"rows": {
+        "s": np.array(["a", "bb", ""], "U"),
+        "d": np.array(["1995-03-15"] * 3, "datetime64[D]"),
+        "x": np.arange(3.0)}, "partition_key": "s"}}
+    cp.save("frag1", reg)
+    _, loaded = cp.load_latest(["frag1"])
+    assert (loaded["t"]["rows"]["s"] == reg["t"]["rows"]["s"]).all()
+    assert (loaded["t"]["rows"]["d"] == reg["t"]["rows"]["d"]).all()
 
 
 def test_heartbeat_failure_detector():
