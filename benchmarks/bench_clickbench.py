@@ -18,6 +18,7 @@ import numpy as np
 
 def run(n_rows: int = 200_000, repeats: int = 2,
         json_path: str | None = None, use_kernels: bool = False):
+    from repro.core import instrument
     from repro.core.executor import SiriusEngine
     from repro.core.fallback import FallbackEngine
     from repro.data import clickbench as cb
@@ -48,10 +49,18 @@ def run(n_rows: int = 200_000, repeats: int = 2,
         # warm hits must come from the structural signature, never object
         # identity — the same contract the TPC-H bench exercises
         warm_plans = [sql_to_plan(sql, catalog) for _ in range(repeats)]
+        syncs0 = instrument.sync_barriers.value
+        xfer0 = eng.buffers.host_transfer_bytes
         t0 = time.perf_counter()
         for p in warm_plans:
             eng.execute(p)
         t_eng = (time.perf_counter() - t0) / repeats
+        cold[qid]["dispatch"] = {
+            "syncs_per_query":
+                (instrument.sync_barriers.value - syncs0) / repeats,
+            "transfer_bytes_per_query":
+                (eng.buffers.host_transfer_bytes - xfer0) / repeats,
+        }
         cold[qid]["plan_cache_hit"] = eng.executor.last_plan_cache_hit
 
         fb.execute(plan)
@@ -110,6 +119,7 @@ def run(n_rows: int = 200_000, repeats: int = 2,
                               "compile_s_cold":
                                   round(cold[qid]["compile_s"], 6),
                               "plan_cache_hit": cold[qid]["plan_cache_hit"],
+                              "dispatch": cold[qid]["dispatch"],
                               "profile": profiles[qid]}
                         for qid, t_eng, t_fb in rows},
             "total_engine_s": round(tot_e, 6),

@@ -9,7 +9,10 @@ scale.  Queries go through the generic ``run_plan`` path (exchange placement
 
 With ``json_path`` the per-query totals are merged into the BENCH json as a
 ``"distributed"`` section, which ``scripts/profile_diff.py`` gates alongside
-the single-node profiles.
+the single-node profiles.  Each query entry also embeds its per-exchange
+``{bytes_per_shard, skew_ratio}`` rows (``eng.exchange_summary()``) and the
+journal's per-query event summary, so skew regressions show up in BENCH
+diffs without re-running the mesh.
 """
 from __future__ import annotations
 
@@ -26,6 +29,8 @@ sys.path.insert(0, {src!r})
 from repro.core.distributed import DistributedEngine
 from repro.data.tpch import generate
 
+from repro.observability.journal import JOURNAL
+
 db = generate({sf})
 eng = DistributedEngine(db, n_shards={shards})
 out = []
@@ -35,7 +40,10 @@ for qid in (1, 3, 6, 12):
     t = dict(eng.timers)
     out.append({{"qid": qid, "compute": t.get("compute", 0.0),
                 "exchange": t.get("exchange", 0.0),
-                "other": t.get("other", 0.0), "total": t.get("total", 0.0)}})
+                "other": t.get("other", 0.0), "total": t.get("total", 0.0),
+                "compile": t.get("compile", 0.0),
+                "exchanges": eng.exchange_summary(),
+                "journal": JOURNAL.summary(eng.last_query_id)}})
 print("RESULT " + json.dumps(out))
 """
 
@@ -70,7 +78,9 @@ def run(scale_factor: float = 0.01, n_shards: int = 8,
             "shards": n_shards,
             "scale_factor": scale_factor,
             "queries": {f"q{r['qid']}": {
-                k: r[k] for k in ("total", "compute", "exchange", "other")}
+                k: r[k] for k in ("total", "compute", "exchange", "other",
+                                  "compile", "exchanges", "journal")
+                if k in r}
                 for r in rows},
         }
         with open(json_path, "w") as f:

@@ -17,6 +17,7 @@ import numpy as np
 
 def run(scale_factor: float = 0.02, repeats: int = 2,
         json_path: str | None = None, use_kernels: bool = False):
+    from repro.core import instrument
     from repro.core.executor import SiriusEngine
     from repro.core.fallback import FallbackEngine
     from repro.data.tpch import generate, load_into_engine
@@ -42,10 +43,21 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
         eng.execute(QUERIES[qid]())
         cold[qid] = {"cold_s": time.perf_counter() - t0,
                      "compile_s": eng.executor.last_compile_seconds}
+        # dispatch budget telemetry around the warm repeats: barrier count
+        # (contract: one per query) and buffer-ledger transfer bytes
+        # (contract: zero once warm) — profile_diff.py hard-gates both.
+        syncs0 = instrument.sync_barriers.value
+        xfer0 = eng.buffers.host_transfer_bytes
         t0 = time.perf_counter()
         for _ in range(repeats):
             eng.execute(QUERIES[qid]())
         t_eng = (time.perf_counter() - t0) / repeats
+        cold[qid]["dispatch"] = {
+            "syncs_per_query":
+                (instrument.sync_barriers.value - syncs0) / repeats,
+            "transfer_bytes_per_query":
+                (eng.buffers.host_transfer_bytes - xfer0) / repeats,
+        }
         cold[qid]["plan_cache_hit"] = eng.executor.last_plan_cache_hit
 
         fb.execute(QUERIES[qid]())
@@ -123,6 +135,7 @@ def run(scale_factor: float = 0.02, repeats: int = 2,
                                         round(cold[qid]["compile_s"], 6),
                                     "plan_cache_hit":
                                         cold[qid]["plan_cache_hit"],
+                                    "dispatch": cold[qid]["dispatch"],
                                     "device_fragment_fraction": frac[qid],
                                     "profile": profiles[f"q{qid}"]}
                         for qid, t_eng, t_fb in rows},

@@ -7,8 +7,9 @@ of both workloads through exchange placement → fragment cutting →
 shard_map collectives, checking row-exactness against the numpy oracle.
 
 Run:  PYTHONPATH=src python scripts/distributed_smoke.py [--shards N]
-                                                         [--sf SF] [-v]
-Exit status: 0 all queries match, 1 otherwise.
+                                  [--sf SF] [--trace-out OUT.json] [-v]
+Exit status: 0 all queries match, 1 otherwise.  ``--trace-out`` dumps the
+merged Chrome trace (all smoke queries, one tree each) for CI artifacts.
 """
 from __future__ import annotations
 
@@ -19,6 +20,8 @@ import sys
 ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
 ap.add_argument("--shards", type=int, default=4)
 ap.add_argument("--sf", type=float, default=0.004)
+ap.add_argument("--trace-out", metavar="OUT.json",
+                help="write the merged Chrome trace of every smoke query")
 ap.add_argument("-v", "--verbose", action="store_true")
 ARGS = ap.parse_args()
 
@@ -97,6 +100,18 @@ def main() -> int:
             print(f"clickbench {qid}: {'ok' if ok else 'MISMATCH ' + why}")
         if not ok:
             failures.append(f"clickbench {qid}")
+
+    if ARGS.trace_out:
+        import json
+
+        from repro.observability.journal import JOURNAL, to_chrome
+        out_dir = os.path.dirname(ARGS.trace_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(ARGS.trace_out, "w") as f:
+            json.dump(to_chrome(JOURNAL.events(), epoch=JOURNAL.epoch), f)
+        print(f"merged chrome trace ({len(JOURNAL.query_ids())} queries) "
+              f"-> {ARGS.trace_out}")
 
     n = len(TPCH_QIDS) + len(CLICKBENCH_QIDS)
     if failures:

@@ -9,8 +9,20 @@ CI smoke artifacts) or BENCH_*.json files whose ``queries`` entries embed a
 ``"profile"`` dict — in which case each query present in both files is
 diffed.  An operator/phase **regresses** when it slowed by more than
 ``threshold``× AND by more than ``min-delta-ms`` wall milliseconds (both
-gates, so microsecond-scale noise never fails a build).  Exit status: 0
-clean, 1 regression(s) found, 2 usage/input error.
+gates, so microsecond-scale noise never fails a build).
+
+Three additional BENCH-level gates (each applies only when the inputs
+carry the data):
+
+* kernel hits — a query whose ``kernel_hits.per_query`` device-kernel
+  count drops to zero between the two files regresses (silent fallback);
+* dispatch budgets — any query in the new file whose ``dispatch``
+  telemetry shows more than one sync per warm query or nonzero host
+  transfer bytes regresses (the paper's dispatch contract);
+* distributed — per-query totals gated as above, plus a per-exchange
+  skew table printed from the new file's ``distributed.queries.*.exchanges``.
+
+Exit status: 0 clean, 1 regression(s) found, 2 usage/input error.
 """
 from __future__ import annotations
 
@@ -25,14 +37,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 from repro.observability import diff_profiles, validate_profile  # noqa: E402
 
 
-def _load_distributed(path: str) -> dict:
-    """→ BENCH ``distributed`` section ({} when absent or not a BENCH file)."""
+def _load_raw(path: str) -> dict:
+    """→ whole BENCH dict ({} when unreadable or not an object)."""
     try:
         with open(path) as f:
             d = json.load(f)
     except (OSError, json.JSONDecodeError):
         return {}
-    sec = d.get("distributed") if isinstance(d, dict) else None
+    return d if isinstance(d, dict) else {}
+
+
+def _load_distributed(path: str) -> dict:
+    """→ BENCH ``distributed`` section ({} when absent or not a BENCH file)."""
+    sec = _load_raw(path).get("distributed")
     return sec if isinstance(sec, dict) else {}
 
 
@@ -56,6 +73,76 @@ def _diff_distributed(old: dict, new: dict, threshold: float,
             regressions.append(q)
             line = "REGRESSION " + line + f" ({b/a:.2f}x)"
         report.append(line)
+    return regressions, report
+
+
+def _diff_kernel_hits(old_raw: dict, new_raw: dict):
+    """Flag queries whose device-kernel coverage collapsed to zero.
+
+    Compared only when BOTH BENCH files carry ``kernel_hits.per_query``.
+    A query regresses when the old run had at least one non-fallback
+    kernel hit and the new run has none — the tiered-kernel equivalent
+    of silently falling back to the reference path."""
+    regressions, report = [], []
+    o = old_raw.get("kernel_hits", {}).get("per_query")
+    n = new_raw.get("kernel_hits", {}).get("per_query")
+    if not isinstance(o, dict) or not isinstance(n, dict):
+        return regressions, report
+
+    def hits(per_kernel: dict) -> int:
+        return sum(int(v) for k, v in per_kernel.items()
+                   if k != "fallback" and isinstance(v, (int, float)))
+
+    for q in sorted(set(o) & set(n)):
+        a, b = hits(o[q]), hits(n[q])
+        if a > 0 and b == 0:
+            regressions.append(q)
+            report.append(f"REGRESSION kernel_hits {q}: {a} device kernel "
+                          f"hit(s) -> 0 (fell back to reference path)")
+    return regressions, report
+
+
+def _render_skew_table(dist_new: dict) -> list:
+    """Per-exchange skew table from the new BENCH distributed section
+    (``queries.qN.exchanges`` rows embedded by bench_distributed)."""
+    lines = []
+    for q, entry in sorted(dist_new.get("queries", {}).items()):
+        exchanges = entry.get("exchanges") if isinstance(entry, dict) else None
+        if not isinstance(exchanges, list) or not exchanges:
+            continue
+        if not lines:
+            lines.append(f"{'query':<6} {'fragment':<22} {'kind':<10} "
+                         f"{'bytes':>12} {'skew':>6}")
+        for ex in exchanges:
+            bps = ex.get("bytes_per_shard", []) or []
+            lines.append(f"{q:<6} {str(ex.get('fragment', '?')):<22} "
+                         f"{str(ex.get('kind', '?')):<10} "
+                         f"{int(sum(bps)):>12} "
+                         f"{float(ex.get('skew_ratio', 1.0)):>6.2f}")
+    if lines:
+        lines.insert(0, "per-exchange skew (new file):")
+    return lines
+
+
+def _check_dispatch_budgets(new_raw: dict):
+    """Hard budgets on the new file's per-query dispatch telemetry:
+    more than one device sync per warm query, or any host transfer
+    bytes inside the pipeline, breaks the paper's dispatch contract."""
+    regressions, report = [], []
+    for q, entry in sorted(new_raw.get("queries", {}).items()):
+        disp = entry.get("dispatch") if isinstance(entry, dict) else None
+        if not isinstance(disp, dict):
+            continue
+        syncs = float(disp.get("syncs_per_query", 0.0))
+        xfer = float(disp.get("transfer_bytes_per_query", 0.0))
+        if syncs > 1.0 + 1e-9:
+            regressions.append(q)
+            report.append(f"REGRESSION dispatch {q}: {syncs:g} syncs/query "
+                          "(budget: 1)")
+        if xfer > 0:
+            regressions.append(q)
+            report.append(f"REGRESSION dispatch {q}: {xfer:g} host transfer "
+                          "bytes/query (budget: 0)")
     return regressions, report
 
 
@@ -140,6 +227,19 @@ def main(argv=None) -> int:
         for line in report:
             print(line)
         any_regression |= bool(regressions)
+        for line in _render_skew_table(dist_new):
+            print(line)
+
+    old_raw, new_raw = _load_raw(args.old), _load_raw(args.new)
+    regressions, report = _diff_kernel_hits(old_raw, new_raw)
+    for line in report:
+        print(line)
+    any_regression |= bool(regressions)
+
+    regressions, report = _check_dispatch_budgets(new_raw)
+    for line in report:
+        print(line)
+    any_regression |= bool(regressions)
 
     if any_regression:
         print("\nFAIL: regressions found (see REGRESSION lines above)")

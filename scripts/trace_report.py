@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Render a distributed query's journal as timeline / Chrome trace / skew.
+
+Runs distributed TPC-H (default Q3) on a forced host mesh, then serves the
+query journal four ways and cross-checks it:
+
+* text timeline of the merged span tree (coordinator + fragments +
+  replicas + per-shard engine runs + exchanges, one tree per query ID);
+* top-operators table (wall time aggregated by span name);
+* per-exchange bytes/skew report;
+* ``--chrome out.json`` — Chrome trace-event JSON loadable in Perfetto /
+  chrome://tracing (coordinator = pid 0, shard *s* = pid *s*+1).
+
+Verification (exit 1 on failure):
+
+* ``verify_tree`` structural/temporal checks over the warm run's tree;
+* warm root-span wall vs the engine's own ``timers["total"]``;
+* single-node ``engine.execute`` journal span vs ``QueryProfile``
+  ``total_seconds`` (tolerance: 10% + 25 ms each).
+
+``--jsonl FILE`` skips the live run and reads a journal sink written via
+``REPRO_JOURNAL_SINK`` / ``attach_sink`` instead (rendering + structural
+checks only — engine timers are not in the file).
+
+Run:  PYTHONPATH=src python scripts/trace_report.py [--shards N] [--sf SF]
+          [--qid N] [--chrome OUT.json] [--jsonl IN.jsonl] [--query-id ID]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+ap.add_argument("--shards", type=int, default=4)
+ap.add_argument("--sf", type=float, default=0.004)
+ap.add_argument("--qid", type=int, default=3, help="TPC-H query number")
+ap.add_argument("--chrome", metavar="OUT.json",
+                help="write Chrome trace-event JSON here")
+ap.add_argument("--jsonl", metavar="IN.jsonl",
+                help="analyze an existing journal sink instead of running")
+ap.add_argument("--query-id", help="query ID to report (default: last)")
+ap.add_argument("--top", type=int, default=15)
+ARGS = ap.parse_args()
+
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={ARGS.shards}")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.observability.dist import (  # noqa: E402
+    exchange_report, query_wall, render_exchange_report, render_timeline,
+    render_top_operators, top_operators, verify_tree)
+from repro.observability.journal import (  # noqa: E402
+    JOURNAL, load_jsonl, to_chrome)
+
+TOLERANCE_FRAC = 0.10
+TOLERANCE_S = 0.025
+
+
+def close_enough(a: float, b: float) -> bool:
+    return abs(a - b) <= TOLERANCE_FRAC * max(a, b) + TOLERANCE_S
+
+
+def report(events, query_id, epoch: float, failures) -> None:
+    print(f"\n== timeline for {query_id} ==")
+    print(render_timeline(events, query_id, epoch=epoch))
+    print(f"\n== top operators ==")
+    print(render_top_operators(top_operators(events, query_id, n=ARGS.top)))
+    print(f"\n== exchanges ==")
+    print(render_exchange_report(exchange_report(events, query_id)))
+    errors = verify_tree(events, query_id)
+    if errors:
+        failures.append(f"verify_tree({query_id}): {len(errors)} violations")
+        for e in errors[:10]:
+            print(f"  VIOLATION: {e}")
+    else:
+        print(f"\nverify_tree({query_id}): ok")
+
+
+def main() -> int:
+    failures = []
+
+    if ARGS.jsonl:
+        events = load_jsonl(ARGS.jsonl)
+        if not events:
+            print(f"error: no events in {ARGS.jsonl}", file=sys.stderr)
+            return 2
+        qids = []
+        for e in events:
+            if e["query_id"] not in qids:
+                qids.append(e["query_id"])
+        qid = ARGS.query_id or qids[-1]
+        epoch = min(e["ts"] for e in events)
+        report(events, qid, epoch, failures)
+        if ARGS.chrome:
+            with open(ARGS.chrome, "w") as f:
+                json.dump(to_chrome(
+                    [e for e in events if e["query_id"] == qid],
+                    epoch=epoch), f)
+            print(f"chrome trace -> {ARGS.chrome}")
+        if failures:
+            print(f"\nFAIL: {failures}")
+            return 1
+        print("\nOK")
+        return 0
+
+    from repro.core.distributed import DistributedEngine  # noqa: E402
+    from repro.core.executor import SiriusEngine  # noqa: E402
+    from repro.data.tpch import generate, load_into_engine  # noqa: E402
+    from repro.data.tpch_queries import QUERIES  # noqa: E402
+
+    db = generate(ARGS.sf)
+    eng = DistributedEngine(db, n_shards=ARGS.shards)
+    plan_fn = QUERIES[ARGS.qid]
+
+    print(f"distributed q{ARGS.qid} on {ARGS.shards} shards "
+          f"(sf {ARGS.sf}): cold + warm run ...")
+    eng.run_plan(plan_fn())            # cold: compiles, may speculate
+    eng.run_plan(plan_fn())            # warm: the run we verify
+    qid = ARGS.query_id or eng.last_query_id
+    events = JOURNAL.events()
+
+    report(events, qid, JOURNAL.epoch, failures)
+
+    # cross-check 1: warm root span wall vs the engine's own total timer
+    wall, root = query_wall(events, qid)
+    total = eng.timers.get("total", 0.0)
+    ok = root is not None and close_enough(wall, total)
+    print(f"\nroot span {wall * 1e3:.2f} ms vs engine timers total "
+          f"{total * 1e3:.2f} ms: {'ok' if ok else 'MISMATCH'}")
+    if not ok:
+        failures.append("root span wall vs engine timers total")
+
+    # cross-check 2: single-node engine.execute span vs QueryProfile
+    seng = SiriusEngine()
+    load_into_engine(seng, db)
+    seng.execute(plan_fn())            # cold
+    seng.execute(plan_fn(), analyze=True)
+    sqid, prof = seng.last_query_id, seng.last_profile
+    span_evs = [e for e in JOURNAL.events(sqid)
+                if e["name"] == "engine.execute" and e["kind"] == "span"]
+    if span_evs and prof is not None:
+        span_s = max(e["dur"] for e in span_evs)
+        ok = close_enough(span_s, prof.total_seconds)
+        print(f"single-node engine.execute span {span_s * 1e3:.2f} ms vs "
+              f"QueryProfile total {prof.total_seconds * 1e3:.2f} ms: "
+              f"{'ok' if ok else 'MISMATCH'}")
+        if not ok:
+            failures.append("engine.execute span vs QueryProfile total")
+    else:
+        failures.append("no single-node engine.execute span / profile")
+
+    if ARGS.chrome:
+        with open(ARGS.chrome, "w") as f:
+            json.dump(to_chrome(JOURNAL.events(qid), epoch=JOURNAL.epoch), f)
+        print(f"chrome trace -> {ARGS.chrome}")
+
+    if failures:
+        print(f"\nFAIL: {failures}")
+        return 1
+    print(f"\nOK: journal tree verified for {qid}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -165,6 +165,17 @@ class BufferManager:
     def free_processing(self, nbytes: int) -> None:
         self.processing_used = max(0, self.processing_used - nbytes)
 
+    def watermarks(self) -> dict:
+        """Host-side ledger sample the query journal attaches to each
+        query span: enough to spot a transfer or memory-pressure
+        regression per query without any device interaction (all plain
+        ints — never triggers a sync)."""
+        return dict(
+            host_transfer_bytes=self.host_transfer_bytes,
+            caching_used=self.caching_used,
+            processing_peak=self.processing_peak,
+        )
+
     def stats(self) -> dict:
         return dict(
             caching_used=self.caching_used,

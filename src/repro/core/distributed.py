@@ -41,7 +41,9 @@ from ..exchange.service import (
     Frame, broadcast, compiled_shard_map, shuffle,
 )
 from ..kernels import ops as kops
-from ..observability.metrics import METRICS
+from ..observability.dist import skew_ratio
+from ..observability.journal import JOURNAL
+from ..observability.metrics import METRICS, MetricsRegistry
 from ..optimizer.exchange import (
     DIST_BOUNDARY_PREFIX, HASH, REP, ExchangeFragment, Partitioning,
     boundary_name, cut_fragments, place_exchanges,
@@ -143,7 +145,7 @@ class _DbCatalog:
 
 
 def _frag_label(frag: ExchangeFragment) -> str:
-    return f"f{frag.fid}_{frag.kind or 'final'}"
+    return frag.label
 
 
 class DistributedEngine:
@@ -186,6 +188,15 @@ class DistributedEngine:
         self.catalog = _DbCatalog(db)
         self.timers: Dict[str, float] = defaultdict(float)
         self.recoveries = 0
+        # per-query exchange telemetry: one dict per collective commit
+        # {fragment, kind, key, bytes_per_shard, skew_ratio, ...} — what
+        # the benchmark driver embeds into BENCH_tpch.json
+        self.exchange_stats: List[dict] = []
+        # journal query ID of the most recent run_plan/run_query
+        self.last_query_id: Optional[str] = None
+        # compile seconds the most recent _exec_one_shard incurred (used
+        # by _run_fragment_shards to attribute compile vs compute)
+        self._last_shard_compile_s = 0.0
         self._shard_engines: List = []
         self._region_compiler = None   # shared across shards/queries
         self._collective_cache: Dict[tuple, Callable] = {}
@@ -294,7 +305,12 @@ class DistributedEngine:
         if override is not None:
             t_start = time.perf_counter()
             self.timers = defaultdict(float)
-            final = self._run_program(override, resume=resume)
+            self.exchange_stats = []
+            with JOURNAL.query_span("distributed.query",
+                                    shards=self.n_shards,
+                                    program=f"q{qid}") as jq:
+                final = self._run_program(override, resume=resume)
+                self.last_query_id = jq.query_id
             self._publish(t_start)
             return final
         from ..data.tpch_queries import QUERIES
@@ -303,10 +319,20 @@ class DistributedEngine:
         return self.run_plan(QUERIES[qid](), resume=resume)
 
     def run_plan(self, plan: Rel, resume: bool = False):
-        """Execute any optimized plan distributed; returns host columns."""
+        """Execute any optimized plan distributed; returns host columns.
+
+        The whole run roots one journal query tree: fragment attempts,
+        per-shard engine runs, collectives, retries, recoveries and
+        checkpoints all land under ``self.last_query_id``."""
         t_start = time.perf_counter()
         self.timers = defaultdict(float)
-        out = self._run_plan_inner(plan, resume=resume, top=True)
+        self.exchange_stats = []
+        with JOURNAL.query_span("distributed.query",
+                                shards=self.n_shards) as jq:
+            out = self._run_plan_inner(plan, resume=resume, top=True)
+            self.last_query_id = jq.query_id
+            jq.set(exchanges=len(self.exchange_stats),
+                   recoveries=self.recoveries)
         self._publish(t_start)
         return out
 
@@ -378,36 +404,66 @@ class DistributedEngine:
                 self.timers["resumed_from"] = idx
         final = None
         attempts = 0
+        frag_attempts: Dict[str, int] = defaultdict(int)
         while idx < len(program):
             name, fn = program[idx]
+            attempt = frag_attempts[name]
+            frag_attempts[name] += 1
             attempts += 1
             if attempts > 3 * len(program) + 10:
                 raise RuntimeError("fragment retry budget exhausted")
+            fattrs = getattr(fn, "_journal_attrs", {})
             try:
-                self.injector.before_fragment(name)
-                delay = self.injector.straggle(name)
-                out, _who = self.speculative.run(
-                    name, lambda: fn(registry), injected_delay_s=delay)
+                with JOURNAL.span(name, "fragment", fragment=name,
+                                  attempt=attempt, **fattrs):
+                    self.injector.before_fragment(name)
+                    delay = self.injector.straggle(name)
+                    # fragments run on SpeculativeRunner threads: carry
+                    # this loop's trace context over so shard/exchange
+                    # spans land in the query tree, with each replica
+                    # (primary or speculative backup) as its own span
+                    ctx = JOURNAL.current_context()
+                    self._frag_attempt = attempt
+
+                    def run_replica(who, body, _name=name, _ctx=ctx):
+                        with JOURNAL.activate(_ctx):
+                            with JOURNAL.span(f"{_name}:{who}", "attempt",
+                                              fragment=_name, replica=who):
+                                return body()
+
+                    out, who = self.speculative.run(
+                        name, lambda: fn(registry), injected_delay_s=delay,
+                        wrap=run_replica)
+                    if who == "backup":
+                        JOURNAL.event("speculative_backup", "recovery",
+                                      fragment=name, attempt=attempt)
             except SimulatedNodeFailure as e:
                 self.heartbeat.kill(e.node)
+                JOURNAL.event("elastic_rebuild", "recovery", fragment=name,
+                              node=e.node, shards_next=max(
+                                  self.n_shards - 1, 1))
                 self._elastic_recover()
                 program = build_program()
                 continue
             except ExchangeOverflow:
+                JOURNAL.event("overflow_retry", "recovery", fragment=name,
+                              slack_next=self.shuffle_slack * 2.0)
                 self.shuffle_slack *= 2.0
                 program = build_program()
                 continue
             if out is not None:
                 final = out
             if checkpoint and self.checkpointer and idx < len(program) - 1:
-                self.checkpointer.save(name, registry)
+                with JOURNAL.span("checkpoint", "checkpoint", fragment=name):
+                    self.checkpointer.save(name, registry)
             idx += 1
         return final
 
     def _publish(self, t_start: float):
         total = time.perf_counter() - t_start
         self.timers["other"] = max(
-            total - self.timers["compute"] - self.timers["exchange"], 0.0)
+            total - self.timers["compute"] - self.timers["exchange"]
+            - self.timers["compile"], 0.0)
         self.timers["total"] = total
         # phase timers land in the process-wide registry so distributed
         # runs show up next to single-device telemetry
@@ -433,16 +489,28 @@ class DistributedEngine:
                           fragments: List[ExchangeFragment]):
         def fn(registry):
             if frag.placement == "coordinator":
-                return self._run_coordinator(frag, registry)
+                with JOURNAL.span(f"{frag.label}@coordinator", "coordinator",
+                                  fragment=frag.label):
+                    return self._run_coordinator(frag, registry)
             outs = self._run_fragment_shards(frag, fragments, registry)
             self._commit_exchange(frag, outs, registry)
             return None
+        fn._journal_attrs = {"placement": frag.placement,
+                             "kind": frag.kind or "final"}
         return fn
 
     def _shard_engine(self, shard: int):
         from .executor import SiriusEngine
         while len(self._shard_engines) <= shard:
-            eng = SiriusEngine(use_kernels=self.use_kernels, num_workers=1)
+            idx = len(self._shard_engines)
+            # each pooled engine gets its own registry, labeled into the
+            # process-global METRICS (``distributed.shard<i>.*``) — shard
+            # metrics stay separable instead of colliding in one flat
+            # namespace, and ``aggregate_labeled`` restores the global view
+            reg = MetricsRegistry(parent=METRICS,
+                                  label=f"distributed.shard{idx}")
+            eng = SiriusEngine(use_kernels=self.use_kernels, num_workers=1,
+                               metrics=reg)
             # boundary temp tables change under a constant plan signature,
             # so warm replays would poison — trace each execution instead
             eng.executor.cache_enabled = False
@@ -475,23 +543,41 @@ class DistributedEngine:
                     tables[tname] = self._base_table(tname, s,
                                                      full=frag.run_once)
             t0 = time.perf_counter()
-            rows = self._exec_one_shard(frag.plan, tables, s)
+            with JOURNAL.span(f"{frag.label}@shard{s}", "shard",
+                              fragment=frag.label, shard=s,
+                              attempt=getattr(self, "_frag_attempt", 0)):
+                rows = self._exec_one_shard(frag.plan, tables, s)
             dt = time.perf_counter() - t0
-            self.timers["compute"] += dt
-            METRICS.counter(f"distributed.shard{s}.compute_seconds").inc(dt)
+            # compile (region trace) time the shard engine incurred is not
+            # compute — attribute it to its own phase timer so the
+            # Table-2-style breakdown stops billing cold traces as compute
+            compile_s = min(self._last_shard_compile_s, dt)
+            self.timers["compute"] += dt - compile_s
+            self.timers["compile"] += compile_s
+            METRICS.counter(
+                f"distributed.shard{s}.compute_seconds").inc(dt - compile_s)
+            if compile_s:
+                METRICS.counter(
+                    f"distributed.shard{s}.compile_seconds").inc(compile_s)
             outs.append(rows)
         return outs
 
     def _exec_one_shard(self, plan: Rel, tables: Dict[str, Table],
                         shard: int) -> Dict[str, np.ndarray]:
         eng = self._shard_engine(shard)
+        self._last_shard_compile_s = 0.0
         try:
             for name, t in tables.items():
                 eng.register(name, t)
             out = eng.execute(plan)
+            # surface the fragment's true trace/compile tax to the caller
+            # (executor.last_compile_seconds is per-execute)
+            self._last_shard_compile_s = eng.executor.last_compile_seconds
             return out.to_host()
-        except Exception:  # noqa: BLE001 — degrade this shard to the host path
+        except Exception as exc:  # noqa: BLE001 — degrade this shard to the host path
             METRICS.counter("distributed.shard_fallbacks").inc()
+            JOURNAL.event("shard_fallback", "shard", shard=shard,
+                          reason=type(exc).__name__)
             host = {name: t.to_host() for name, t in tables.items()}
             return FallbackEngine(host).execute(plan)
 
@@ -509,26 +595,77 @@ class DistributedEngine:
         per_dest = int(shard_cap * self.shuffle_slack / self.n_shards) + 8
         return kops.bucket_size(per_dest, minimum=8)
 
+    @staticmethod
+    def _rows_bytes(rows: Dict[str, np.ndarray]) -> int:
+        return int(sum(np.asarray(v).nbytes for v in rows.values()))
+
     def _commit_exchange(self, frag: ExchangeFragment,
                          outs: List[Dict[str, np.ndarray]], registry: dict):
         name = boundary_name(frag.fid)
         if frag.run_once and frag.kind in ("broadcast", "merge"):
-            # producer already holds the complete result
+            # producer already holds the complete result — a logical
+            # exchange with zero wire cost, still journaled for the tree
             registry[name] = {"rows": outs[0], "partition_key": None}
+            self._record_exchange(frag, frag.kind, None,
+                                  [self._rows_bytes(outs[0])], 0.0, None)
             return
         if frag.run_once:
             # replicated producer feeding a shuffle: source the collective
             # from shard 0, the rest contribute empty frames
             empty = {c: np.asarray(v)[:0] for c, v in outs[0].items()}
             outs = [outs[0]] + [dict(empty) for _ in range(self.n_shards - 1)]
-        if frag.kind == "shuffle":
-            key = frag.keys[0]
-            outs = self._predicate_transfer(frag, outs, registry)
-            rows = self._collective(outs, "shuffle", key)
-            registry[name] = {"rows": rows, "partition_key": key}
-        else:
-            rows = self._collective(outs, frag.kind or "merge", None)
-            registry[name] = {"rows": rows, "partition_key": None}
+        kind = frag.kind or "merge"
+        key = frag.keys[0] if frag.kind == "shuffle" else None
+        with JOURNAL.span(f"exchange:{frag.label}", "exchange",
+                          fragment=frag.label, kind=kind, key=key) as sp:
+            t0 = time.perf_counter()
+            if kind == "shuffle":
+                outs = self._predicate_transfer(frag, outs, registry)
+                rows = self._collective(outs, "shuffle", key)
+                registry[name] = {"rows": rows, "partition_key": key}
+                # skew is about what each shard *receives* post-partition:
+                # re-derive the destination row distribution from the
+                # merged rows (host-side, same hash as the collective)
+                counts = np.bincount(
+                    np_partition_hash(key_to_int64(rows[key]),
+                                      self.n_shards),
+                    minlength=self.n_shards)
+                total_rows = int(counts.sum())
+                bpr = self._rows_bytes(rows) / max(total_rows, 1)
+                bytes_per_shard = [int(c * bpr) for c in counts]
+            else:
+                rows = self._collective(outs, kind, None)
+                registry[name] = {"rows": rows, "partition_key": None}
+                # broadcast/merge replicate everything: the interesting
+                # distribution is what each producer shard contributed
+                bytes_per_shard = [self._rows_bytes(r) for r in outs]
+            wall = time.perf_counter() - t0
+            stat = self._record_exchange(frag, kind, key, bytes_per_shard,
+                                         wall, len(next(iter(rows.values()))))
+            sp.set(**{k: v for k, v in stat.items() if k != "wall_s"})
+
+    def _record_exchange(self, frag: ExchangeFragment, kind: str,
+                         key: Optional[str], bytes_per_shard: List[int],
+                         wall: float, rows_out: Optional[int]) -> dict:
+        stat = {
+            "fragment": frag.label, "kind": kind, "key": key,
+            "bytes_per_shard": [int(b) for b in bytes_per_shard],
+            "skew_ratio": round(skew_ratio(bytes_per_shard), 4),
+            "rows_out": int(rows_out) if rows_out is not None else None,
+            "wall_s": round(wall, 6),
+        }
+        self.exchange_stats.append(stat)
+        return stat
+
+    def exchange_summary(self) -> List[dict]:
+        """One row per exchange for the last query: speculative replicas
+        commit the same (idempotent) exchange twice, so keep the latest
+        entry per fragment — that is also the post-retry slack on
+        overflow-retried shuffles."""
+        latest: Dict[str, dict] = {}
+        for stat in self.exchange_stats:
+            latest[stat["fragment"]] = stat
+        return list(latest.values())
 
     def _predicate_transfer(self, frag, outs, registry):
         """Semi-filter shuffle rows by a committed build side's keys before
@@ -626,7 +763,7 @@ class DistributedEngine:
             fn = compiled_shard_map(
                 step, self.mesh,
                 in_specs=(P("data"), P("data"), P("data")),
-                out_specs=(P("data"), P("data"), P()))
+                out_specs=(P("data"), P("data"), P()), label="shuffle")
         else:   # broadcast / merge: all rows everywhere, one copy returned
             def step(cols, valid):
                 out = broadcast(Frame(cols, valid), "data")
@@ -634,7 +771,7 @@ class DistributedEngine:
             fn = compiled_shard_map(
                 step, self.mesh,
                 in_specs=(P("data"), P("data")),
-                out_specs=(P(), P()))
+                out_specs=(P(), P()), label=kind)
         self._collective_cache[sig] = fn
         return fn
 

@@ -41,7 +41,8 @@ import numpy as np
 
 from ..buffer.manager import BufferManager
 from ..observability import (
-    METRICS, OperatorProfile, PipelineProfile, ProfileBuilder, QueryProfile,
+    JOURNAL, METRICS, OperatorProfile, PipelineProfile, ProfileBuilder,
+    QueryProfile,
 )
 from ..relational.aggregate import group_aggregate
 from ..relational.expressions import Expr, Lit, evaluate
@@ -326,13 +327,18 @@ class PipelineExecutor:
 
     def __init__(self, buffers: BufferManager, num_workers: int = 2,
                  morsel_rows: Optional[int] = None, backend=None,
-                 profile: bool = False, compile_pipelines: bool = True):
+                 profile: bool = False, compile_pipelines: bool = True,
+                 metrics=None):
         self.buffers = buffers
         self.num_workers = num_workers
         self.morsel_rows = morsel_rows
         self.backend = backend
         self.profile = profile
         self.compile_pipelines = compile_pipelines
+        # instance-scoped registry: pooled shard engines get their own
+        # labeled registry (mirroring into the process-global METRICS);
+        # everything else publishes straight into METRICS as before
+        self.metrics = metrics if metrics is not None else METRICS
         self.compiler = PipelineCompiler()
         self.op_times: Dict[str, float] = defaultdict(float)
         self.fallback_queries = 0
@@ -341,7 +347,7 @@ class PipelineExecutor:
         # flip ``cache_enabled`` off around fragments that read boundary
         # tables — those change between accelerate() calls under the same
         # plan signature, which would poison warm replays.
-        self.plan_cache = PlanCache()
+        self.plan_cache = PlanCache(metrics=self.metrics)
         self.cache_enabled = True
         self._exec_depth = 0
         # per-execute telemetry: trace/compile time this query incurred
@@ -350,6 +356,7 @@ class PipelineExecutor:
         self.last_compile_seconds = 0.0
         self.last_plan_signature: Optional[str] = None
         self.last_plan_cache_hit = False
+        self.last_query_id: Optional[str] = None
         # source-table injection for the whole-query replay trace: while
         # set, ReadRel sources resolve here instead of the buffer manager
         self._table_override: Optional[Dict[str, Table]] = None
@@ -400,7 +407,17 @@ class PipelineExecutor:
         a ``QueryProfile`` is assembled on ``self.last_profile``; the
         default path is bit-identical to before — no extra syncs, no
         per-stage timing.  Nested calls (scalar-subquery plans) record into
-        the enclosing query's profile."""
+        the enclosing query's profile.
+
+        Every call lands in the query journal: top-level calls with no
+        ambient trace context root a fresh query tree; nested calls
+        (scalar subqueries, shard-engine runs under an activated fragment
+        context) become child spans of the enclosing query."""
+        with JOURNAL.query_span("engine.execute") as jspan:
+            return self._execute_journaled(plan, analyze, query_text, jspan)
+
+    def _execute_journaled(self, plan: Rel, analyze: bool,
+                           query_text: Optional[str], jspan) -> Table:
         owns_builder = (analyze or self.profile) and self._builder is None
         if owns_builder:
             self._builder = ProfileBuilder(
@@ -437,6 +454,11 @@ class PipelineExecutor:
                 # runs see their true compile tax; warm replays report 0)
                 self.last_compile_seconds = (
                     self.compiler.stats["trace_seconds"] - trace_all0)
+                self.last_query_id = jspan.query_id
+                jspan.set(plan_cache_hit=self.last_plan_cache_hit,
+                          compile_seconds=round(
+                              self.last_compile_seconds, 6),
+                          **self.buffers.watermarks())
             if owns_builder:
                 total = time.perf_counter() - t_query
                 builder, self._builder = self._builder, None
@@ -447,7 +469,7 @@ class PipelineExecutor:
                     k: v - metrics_before.get(k, 0)
                     for k, v in self._metrics_snapshot().items()}
                 self.last_profile = builder.finalize(total, compile_s, metrics)
-                METRICS.histogram("executor.query_seconds").observe(total)
+                self.metrics.histogram("executor.query_seconds").observe(total)
         return out
 
     def _metrics_snapshot(self) -> Dict[str, float]:
@@ -495,9 +517,12 @@ class PipelineExecutor:
                 self.last_plan_signature = sig
                 self.last_plan_cache_hit = True
                 return out
-            except Exception:  # noqa: BLE001 — degrade to a cold run, never fail
+            except Exception as exc:  # noqa: BLE001 — degrade to a cold run, never fail
+                JOURNAL.event("plan_cache.poison", "cache",
+                              reason=type(exc).__name__)
                 self.plan_cache.invalidate(sig, mismatch=True)
-        out = self._execute_recording(plan, sig)
+        with JOURNAL.span("plan_cache.record", "cache"):
+            out = self._execute_recording(plan, sig)
         self.last_plan_signature = sig
         return out
 
@@ -638,7 +663,7 @@ class PipelineExecutor:
         try:
             compiled = jax.jit(fn).lower(tuple(arrays)).compile()
             entry.compiled = (compiled, layout, metas, list(out_meta))
-            METRICS.counter("plan_cache.replay_compiles").inc()
+            self.metrics.counter("plan_cache.replay_compiles").inc()
         except Exception:  # noqa: BLE001 — untraceable: keep the closure loop
             entry.compiled = None
             if os.environ.get("REPRO_DEBUG_REPLAY_COMPILE"):
@@ -650,7 +675,8 @@ class PipelineExecutor:
             # surface it through the same attribution as region traces
             dt = time.perf_counter() - t0
             self.compiler.stats["trace_seconds"] += dt
-            METRICS.histogram("pipeline_compiler.trace_seconds").observe(dt)
+            self.metrics.histogram(
+                "pipeline_compiler.trace_seconds").observe(dt)
 
     def _replay_entry(self, entry: ExecutablePlan) -> Table:
         """The warm path.
@@ -661,7 +687,15 @@ class PipelineExecutor:
         barrier.  Any set flag means the data under a recorded cardinality
         changed: raise ``ReplayMismatch`` so the caller invalidates and
         re-runs cold.  Entries with a compiled replay program dispatch it
-        as one call; the rest run the closure loop."""
+        as one call; the rest run the closure loop.  Either way the warm
+        dispatch is a first-class journal span (its wall time is the
+        dispatch wall the trace tooling reports) instead of vanishing."""
+        with JOURNAL.span("plan_cache.replay", "cache",
+                          mode=("compiled" if entry.compiled is not None
+                                else "closure")):
+            return self._replay_entry_inner(entry)
+
+    def _replay_entry_inner(self, entry: ExecutablePlan) -> Table:
         if entry.compiled is not None:
             compiled, layout, metas, out_meta = entry.compiled
             arrays: List = []
@@ -708,14 +742,20 @@ class PipelineExecutor:
             entry = None
         if entry is None:
             return None
-        try:
-            out = self._replay_entry(entry)
-        except Exception:  # noqa: BLE001
-            self.plan_cache.invalidate(sig, mismatch=True)
-            return None
-        self.last_plan_signature = sig
-        self.last_plan_cache_hit = True
-        self.last_compile_seconds = 0.0
+        with JOURNAL.query_span("engine.execute", entry="warm") as jspan:
+            try:
+                out = self._replay_entry(entry)
+            except Exception as exc:  # noqa: BLE001
+                JOURNAL.event("plan_cache.poison", "cache",
+                              reason=type(exc).__name__)
+                self.plan_cache.invalidate(sig, mismatch=True)
+                return None
+            self.last_plan_signature = sig
+            self.last_plan_cache_hit = True
+            self.last_compile_seconds = 0.0
+            self.last_query_id = jspan.query_id
+            jspan.set(plan_cache_hit=True, compile_seconds=0.0,
+                      **self.buffers.watermarks())
         return out
 
     def _execute_inner(self, plan: Rel) -> Table:
@@ -1002,17 +1042,23 @@ class SiriusEngine:
     def __init__(self, caching_bytes: int = 8 << 30, processing_bytes: int = 8 << 30,
                  num_workers: int = 2, morsel_rows: Optional[int] = None,
                  use_kernels: bool = False, profile: bool = False,
-                 compile_pipelines: bool = True):
+                 compile_pipelines: bool = True, metrics=None):
         self.buffers = BufferManager(caching_bytes, processing_bytes)
         backend = None
         if use_kernels:
             from .kernel_backend import KernelBackend
             backend = KernelBackend()
         self.backend = backend
+        self.metrics = metrics if metrics is not None else METRICS
         self.executor = PipelineExecutor(self.buffers, num_workers, morsel_rows,
                                          backend, profile=profile,
-                                         compile_pipelines=compile_pipelines)
+                                         compile_pipelines=compile_pipelines,
+                                         metrics=self.metrics)
         self.host_tables: Dict[str, dict] = {}
+        # journal query ID of the most recent front-door call (sql /
+        # accelerate / execute) — how callers correlate results with
+        # their span tree in JOURNAL
+        self.last_query_id: Optional[str] = None
         # routing report of the most recent ``accelerate`` call
         self.last_accelerate_report: Optional[dict] = None
         # QueryProfile of the most recent analyzed/profiled query
@@ -1057,6 +1103,7 @@ class SiriusEngine:
                 query_text: Optional[str] = None) -> Table:
         out = self.executor.execute(plan, analyze=analyze,
                                     query_text=query_text)
+        self.last_query_id = self.executor.last_query_id
         if analyze or self.executor.profile:
             self.last_profile = self.executor.last_profile
         return out
@@ -1079,6 +1126,14 @@ class SiriusEngine:
         optimizer *and* plan lowering and goes straight to the cached
         dispatch schedule (``PipelineExecutor.replay_signature``).
         """
+        with JOURNAL.query_span("sql",
+                                text=" ".join(text.split())[:200]) as jq:
+            out = self._sql_impl(text, catalog, optimize, analyze)
+            if jq.query_id is not None:
+                self.last_query_id = jq.query_id
+            return out
+
+    def _sql_impl(self, text: str, catalog, optimize: bool, analyze: bool):
         from ..sql import EXPLAIN_ANALYZE_RE, run_sql, sql_to_plan
         from ..sql.binder import DEFAULT_CATALOG
         m = EXPLAIN_ANALYZE_RE.match(text)
@@ -1127,6 +1182,13 @@ class SiriusEngine:
         ingest, fragment analysis and routing and replays the cached
         dispatch schedule directly.
         """
+        with JOURNAL.query_span("wire") as jq:
+            out = self._accelerate_impl(wire_plan, registry, analyze)
+            if jq.query_id is not None:
+                self.last_query_id = jq.query_id
+            return out
+
+    def _accelerate_impl(self, wire_plan, registry, analyze: bool):
         from ..relational.table import Table as _Table
         from ..substrait import HybridRouter, ingest, wire_bytes
 

@@ -179,13 +179,28 @@ def all_reduce_sum(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return jax.lax.psum(x, axis)
 
 
-def compiled_shard_map(fn, mesh, in_specs, out_specs):
+def compiled_shard_map(fn, mesh, in_specs, out_specs,
+                       label: Optional[str] = None):
     """jit(shard_map(fn)) through the jax-version compat shim.
 
     The one wrapper the distributed executor uses for every collective
     step; replication checking stays off (exchange steps mix per-shard
     buffers with psum'd overflow scalars).
+
+    With ``label``, every invocation journals a ``collective:<label>``
+    span measuring the host-side **dispatch wall** (enqueue, not device
+    completion — the caller's own barrier times that); spans are dropped
+    outside a query context, so the label costs nothing standalone.
     """
     from ..core.compat import shard_map as _compat_shard_map
-    return jax.jit(_compat_shard_map(fn, mesh, in_specs=in_specs,
-                                     out_specs=out_specs))
+    from ..observability.journal import JOURNAL
+    compiled = jax.jit(_compat_shard_map(fn, mesh, in_specs=in_specs,
+                                         out_specs=out_specs))
+    if label is None:
+        return compiled
+
+    def dispatch(*args):
+        with JOURNAL.span(f"collective:{label}", "collective",
+                          shards=len(mesh.devices.reshape(-1))):
+            return compiled(*args)
+    return dispatch

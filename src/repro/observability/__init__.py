@@ -6,7 +6,12 @@ to a named operator, compile step, cache or transfer — the DuckDB
 ``EXPLAIN ANALYZE`` / ``PRAGMA enable_profiling='json'`` loop rebuilt for
 the device-resident engine.
 
-Three pieces (DESIGN.md §12):
+Four pieces (DESIGN.md §12, §15):
+
+* ``journal`` + ``dist`` — the always-on, query-ID-keyed **event
+  journal** (thread-safe ring buffer + JSONL sink) with trace-context
+  propagation across threads and the shard mesh, Chrome trace-event
+  export, and span-tree merge/skew analysis for distributed queries;
 
 * ``tracer``  — nested context-manager **spans** (thread-safe, near-zero
   cost when disabled) for ad-hoc wall-clock attribution;
@@ -19,7 +24,11 @@ Three pieces (DESIGN.md §12):
   per-fused-region wall time, rows in/out, compile-vs-execute split,
   cache/kernel/transfer stats, versioned JSON export and profile diffing.
 """
-from .metrics import METRICS, MetricsRegistry
+from .journal import (
+    JOURNAL, JOURNAL_SCHEMA_VERSION, JournalSpan, QueryJournal, TraceContext,
+    to_chrome,
+)
+from .metrics import METRICS, MetricsRegistry, aggregate_labeled
 from .profile import (
     PROFILE_SCHEMA_VERSION, OperatorProfile, PipelineProfile, ProfileBuilder,
     QueryProfile, diff_profiles, validate_profile,
@@ -27,7 +36,9 @@ from .profile import (
 from .tracer import TRACER, Span, SpanTracer
 
 __all__ = [
-    "METRICS", "MetricsRegistry", "OperatorProfile", "PROFILE_SCHEMA_VERSION",
-    "PipelineProfile", "ProfileBuilder", "QueryProfile", "Span", "SpanTracer",
-    "TRACER", "diff_profiles", "validate_profile",
+    "JOURNAL", "JOURNAL_SCHEMA_VERSION", "JournalSpan", "METRICS",
+    "MetricsRegistry", "OperatorProfile", "PROFILE_SCHEMA_VERSION",
+    "PipelineProfile", "ProfileBuilder", "QueryJournal", "QueryProfile",
+    "Span", "SpanTracer", "TRACER", "TraceContext", "aggregate_labeled",
+    "diff_profiles", "to_chrome", "validate_profile",
 ]

@@ -18,7 +18,7 @@ increments, so wall-clock seconds can accumulate in counters.
 from __future__ import annotations
 
 import threading
-from typing import Dict, Union
+from typing import Dict, Optional, Union
 
 Number = Union[int, float]
 
@@ -26,14 +26,17 @@ Number = Union[int, float]
 class Counter:
     """Monotonically increasing value (int or float)."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, mirror: Optional["Counter"] = None):
         self.name = name
+        self.mirror = mirror
         self._lock = threading.Lock()
         self._value: Number = 0
 
     def inc(self, n: Number = 1) -> None:
         with self._lock:
             self._value += n
+        if self.mirror is not None:
+            self.mirror.inc(n)
 
     @property
     def value(self) -> Number:
@@ -44,14 +47,17 @@ class Counter:
 class Gauge:
     """Last-write-wins value."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, mirror: Optional["Gauge"] = None):
         self.name = name
+        self.mirror = mirror
         self._lock = threading.Lock()
         self._value: Number = 0
 
     def set(self, v: Number) -> None:
         with self._lock:
             self._value = v
+        if self.mirror is not None:
+            self.mirror.set(v)
 
     @property
     def value(self) -> Number:
@@ -64,8 +70,9 @@ class Histogram:
     without bucket-boundary bikeshedding; percentiles belong to the future
     serving layer's scraper."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, mirror: Optional["Histogram"] = None):
         self.name = name
+        self.mirror = mirror
         self._lock = threading.Lock()
         self.count = 0
         self.sum = 0.0
@@ -78,6 +85,8 @@ class Histogram:
             self.sum += v
             self.min = min(self.min, v)
             self.max = max(self.max, v)
+        if self.mirror is not None:
+            self.mirror.observe(v)
 
     def summary(self) -> Dict[str, Number]:
         with self._lock:
@@ -88,33 +97,55 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Create-or-get instruments by dotted name (``compiler.cache_hits``)."""
+    """Create-or-get instruments by dotted name (``compiler.cache_hits``).
 
-    def __init__(self):
+    A registry may be **scoped**: constructed with a ``parent`` registry
+    and a ``label`` prefix, every instrument mirrors its updates into the
+    parent under ``<label>.<name>``.  The distributed runner gives each
+    pooled shard engine its own registry labeled ``distributed.shard<i>``
+    so shard metrics stop colliding in one flat namespace, while the
+    process-global view survives as labeled series in ``METRICS`` that
+    ``aggregate_labeled`` can roll back up."""
+
+    def __init__(self, parent: Optional["MetricsRegistry"] = None,
+                 label: Optional[str] = None):
+        if (parent is None) != (label is None):
+            raise ValueError("parent and label must be given together")
+        self.parent = parent
+        self.label = label
         self._lock = threading.Lock()
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
 
+    def _mirror_name(self, name: str) -> str:
+        return f"{self.label}.{name}"
+
     def counter(self, name: str) -> Counter:
         with self._lock:
             c = self._counters.get(name)
             if c is None:
-                c = self._counters[name] = Counter(name)
+                mirror = (self.parent.counter(self._mirror_name(name))
+                          if self.parent is not None else None)
+                c = self._counters[name] = Counter(name, mirror=mirror)
             return c
 
     def gauge(self, name: str) -> Gauge:
         with self._lock:
             g = self._gauges.get(name)
             if g is None:
-                g = self._gauges[name] = Gauge(name)
+                mirror = (self.parent.gauge(self._mirror_name(name))
+                          if self.parent is not None else None)
+                g = self._gauges[name] = Gauge(name, mirror=mirror)
             return g
 
     def histogram(self, name: str) -> Histogram:
         with self._lock:
             h = self._histograms.get(name)
             if h is None:
-                h = self._histograms[name] = Histogram(name)
+                mirror = (self.parent.histogram(self._mirror_name(name))
+                          if self.parent is not None else None)
+                h = self._histograms[name] = Histogram(name, mirror=mirror)
             return h
 
     def snapshot(self) -> Dict[str, Number]:
@@ -149,6 +180,33 @@ class MetricsRegistry:
             self._counters.clear()
             self._gauges.clear()
             self._histograms.clear()
+
+
+def aggregate_labeled(snapshot: Dict[str, Number], family: str,
+                      sep: str = ".") -> Dict[str, Number]:
+    """Roll labeled series back up into one process-global view.
+
+    Given a snapshot containing mirrored keys like
+    ``distributed.shard0.compute_seconds`` / ``...shard1...``, an
+    aggregation over family ``"distributed.shard"`` sums every
+    ``<family><i>.<metric>`` into ``<metric>`` (histogram ``.min`` /
+    ``.max`` take min/max instead of summing)."""
+    import re
+
+    pat = re.compile(rf"^{re.escape(family)}(\d+){re.escape(sep)}(.+)$")
+    out: Dict[str, Number] = {}
+    for key, v in snapshot.items():
+        m = pat.match(key)
+        if m is None:
+            continue
+        metric = m.group(2)
+        if metric.endswith(".min"):
+            out[metric] = min(out.get(metric, float("inf")), v)
+        elif metric.endswith(".max"):
+            out[metric] = max(out.get(metric, float("-inf")), v)
+        else:
+            out[metric] = out.get(metric, 0) + v
+    return out
 
 
 # The process-wide registry every subsystem publishes into.

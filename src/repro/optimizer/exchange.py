@@ -92,6 +92,13 @@ class ExchangeFragment(Fragment):
     run_once: bool = False
     pt: Optional[Tuple[int, str, str]] = None   # (build fid, probe key, build key)
 
+    @property
+    def label(self) -> str:
+        """Stable human-readable handle (``f<fid>_<kind>``) — the name the
+        coordinator's dispatch loop, fault-injection plans, checkpoints
+        and journal spans all agree on."""
+        return f"f{self.fid}_{self.kind or 'final'}"
+
 
 def boundary_name(fid: int) -> str:
     return f"{DIST_BOUNDARY_PREFIX}{fid}"

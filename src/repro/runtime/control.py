@@ -107,7 +107,13 @@ class SpeculativeRunner:
         self.speculated: List[str] = []
 
     def run(self, name: str, fn: Callable[[], object],
-            injected_delay_s: float = 0.0):
+            injected_delay_s: float = 0.0,
+            wrap: Optional[Callable[[str, Callable[[], object]], object]] = None):
+        """``wrap``, when given, is called as ``wrap(who, fn)`` on the
+        replica's own thread — the hook the coordinator uses to carry its
+        journal trace context onto primary/backup threads (fragments run
+        on spawned threads, so ambient thread-local context doesn't
+        follow by itself)."""
         budget = max(self.min_budget_s,
                      self.budget_factor * self.history.get(name, 0.0))
         result: Dict[str, object] = {}
@@ -118,7 +124,7 @@ class SpeculativeRunner:
                 if delay:
                     time.sleep(delay)
                 try:
-                    r = fn()
+                    r = wrap(who, fn) if wrap is not None else fn()
                 except BaseException as e:  # noqa: BLE001 — re-raised below
                     if not done.is_set():
                         result.setdefault("error", e)

@@ -1,0 +1,399 @@
+"""Fleet-level query journal (DESIGN.md §15): the always-on trace layer.
+
+The contracts under test:
+  * TraceContext — wire-able (query_id, span_id) roundtrip and cross-thread
+    propagation via ``JOURNAL.activate``;
+  * query isolation — N concurrent threads running mixed TPC-H/ClickBench
+    queries produce clean per-query trees: disjoint query IDs, no
+    interleaved parentage, no duplicate span IDs;
+  * always-on overhead — a warm TPC-H query with the journal enabled stays
+    within 5% (+epsilon) of disabled, and the one-sync-per-query and
+    zero-transfer contracts hold either way;
+  * bounded ring — overflow drops oldest and counts ``dropped``;
+  * JSONL sink — every line self-describing via ``schema_version``;
+  * Chrome export — valid trace-event JSON with coordinator/shard lanes;
+  * per-engine metrics scoping — pooled shard engines mirror into the
+    process registry under labels; ``aggregate_labeled`` rolls them up;
+  * distributed journal + compile attribution — an in-process 1-shard run
+    produces a verified span tree and self-consistent timers;
+  * profile_diff gates — kernel-hit collapse and dispatch-budget breaks
+    flag regressions.
+"""
+import importlib.util
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import instrument
+from repro.core.executor import SiriusEngine
+from repro.data import clickbench as cb
+from repro.data.tpch import generate, load_into_engine
+from repro.data.tpch_queries import QUERIES
+from repro.observability.dist import (
+    exchange_report, skew_ratio, span_tree, verify_tree)
+from repro.observability.journal import (
+    JOURNAL, JOURNAL_SCHEMA_VERSION, QueryJournal, TraceContext, load_jsonl,
+    to_chrome)
+from repro.observability.metrics import (
+    METRICS, MetricsRegistry, aggregate_labeled)
+from repro.sql import sql_to_plan
+
+from conftest import USE_KERNELS
+
+
+# ---------------------------------------------------------------------------
+# context primitives
+# ---------------------------------------------------------------------------
+
+
+def test_trace_context_roundtrip():
+    ctx = TraceContext(query_id="q1-7", span_id=42)
+    assert TraceContext.from_dict(ctx.to_dict()) == ctx
+    assert TraceContext.from_dict({"query_id": "q"}).span_id is None
+
+
+def test_span_outside_query_context_is_dropped():
+    j = QueryJournal(capacity=64)
+    with j.span("orphan", "engine"):
+        pass
+    j.event("orphan_instant", "engine")
+    assert j.events() == []
+
+
+def test_query_span_roots_tree_and_nests():
+    j = QueryJournal(capacity=64)
+    with j.query_span("sql", text="select 1") as root:
+        qid = root.query_id
+        with j.span("child", "engine", depth=1) as c:
+            assert c.query_id == qid
+            j.event("mark", "cache")
+    evs = j.events(qid)
+    assert {e["name"] for e in evs} == {"sql", "child", "mark"}
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["child"]["parent_id"] == by_name["sql"]["span_id"]
+    assert by_name["mark"]["parent_id"] == by_name["child"]["span_id"]
+    assert by_name["sql"]["parent_id"] is None
+    # one root, child under it, instant under the child
+    roots = span_tree(evs, qid)
+    assert len(roots) == 1 and roots[0].name == "sql"
+
+
+def test_activate_propagates_context_across_threads():
+    j = QueryJournal(capacity=64)
+    with j.query_span("distributed.query") as root:
+        ctx = j.current_context()
+
+        def worker():
+            with j.activate(ctx):
+                with j.span("fragment@thread", "fragment"):
+                    pass
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    evs = j.events(root.query_id)
+    frag = next(e for e in evs if e["name"] == "fragment@thread")
+    assert frag["query_id"] == root.query_id
+    assert frag["parent_id"] == root.span_id
+    assert verify_tree(evs, root.query_id) == []
+
+
+def test_ring_capacity_bounds_and_counts_drops():
+    j = QueryJournal(capacity=8)
+    with j.query_span("q") as root:
+        for i in range(20):
+            j.event(f"e{i}")
+    assert len(j.events()) == 8
+    assert j.dropped > 0
+    assert j.summary()["dropped"] == j.dropped
+    j.clear()
+    assert j.events() == [] and j.dropped == 0
+
+
+def test_jsonl_sink_roundtrip(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    j = QueryJournal(capacity=64)
+    j.attach_sink(path)
+    with j.query_span("sql") as root:
+        j.event("mark", "cache", n=3)
+    j.detach_sink()
+    lines = load_jsonl(path)
+    assert len(lines) == 2
+    assert all(l["schema_version"] == JOURNAL_SCHEMA_VERSION for l in lines)
+    assert {l["name"] for l in lines} == {"sql", "mark"}
+    assert all(l["query_id"] == root.query_id for l in lines)
+
+
+def test_disabled_journal_is_noop():
+    j = QueryJournal(capacity=64, enabled=False)
+    with j.query_span("sql") as sp:
+        assert sp.query_id is None
+        j.event("mark")
+    assert j.events() == []
+
+
+def test_attrs_cleaned_to_host_plain():
+    import numpy as np
+    j = QueryJournal(capacity=64)
+    with j.query_span("q", np_scalar=np.int64(7), arr=np.arange(3)) as sp:
+        qid = sp.query_id
+    ev = j.events(qid)[0]
+    assert ev["attrs"]["np_scalar"] == 7
+    assert isinstance(ev["attrs"]["arr"], str)   # repr'd, not a device value
+    json.dumps(ev)                                # JSON-able end to end
+
+
+# ---------------------------------------------------------------------------
+# skew + chrome export
+# ---------------------------------------------------------------------------
+
+
+def test_skew_ratio_math():
+    assert skew_ratio([]) == 1.0
+    assert skew_ratio([0, 0]) == 1.0
+    assert skew_ratio([100, 100, 100, 100]) == 1.0
+    assert skew_ratio([400, 0, 0, 0]) == 4.0
+    assert abs(skew_ratio([300, 100]) - 1.5) < 1e-12
+
+
+def test_chrome_export_shape():
+    j = QueryJournal(capacity=64)
+    with j.query_span("distributed.query") as root:
+        with j.span("f0@shard1", "shard", shard=1):
+            with j.span("engine.execute", "engine"):
+                pass
+        j.event("speculative_backup", "recovery")
+    d = to_chrome(j.events(root.query_id), epoch=j.epoch)
+    evs = d["traceEvents"]
+    assert d["otherData"]["schema_version"] == JOURNAL_SCHEMA_VERSION
+    phs = {e["ph"] for e in evs}
+    assert phs == {"X", "i", "M"}
+    lanes = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert lanes == {"coordinator", "shard 1"}
+    # engine.execute has no shard attr but inherits its ancestor's lane
+    engine_ev = next(e for e in evs if e["name"] == "engine.execute")
+    assert engine_ev["pid"] == 2
+    assert all(e["dur"] > 0 for e in evs if e["ph"] == "X")
+
+
+# ---------------------------------------------------------------------------
+# per-engine metrics scoping
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_scoping_mirrors_and_aggregates():
+    parent = MetricsRegistry()
+    shard0 = MetricsRegistry(parent=parent, label="pool.shard0")
+    shard1 = MetricsRegistry(parent=parent, label="pool.shard1")
+    shard0.counter("plan_cache.hits").inc(3)
+    shard1.counter("plan_cache.hits").inc(5)
+    shard0.histogram("query_seconds").observe(0.5)
+    shard1.histogram("query_seconds").observe(1.5)
+    # per-engine views are isolated …
+    assert shard0.snapshot()["plan_cache.hits"] == 3
+    assert shard1.snapshot()["plan_cache.hits"] == 5
+    # … while the parent holds the labeled process-global view
+    snap = parent.snapshot()
+    assert snap["pool.shard0.plan_cache.hits"] == 3
+    assert snap["pool.shard1.plan_cache.hits"] == 5
+    agg = aggregate_labeled(snap, "pool.shard")
+    assert agg["plan_cache.hits"] == 8
+    assert agg["query_seconds.count"] == 2
+    assert agg["query_seconds.max"] == pytest.approx(1.5)
+
+
+def test_metrics_registry_label_requires_parent():
+    with pytest.raises(ValueError):
+        MetricsRegistry(label="pool.shard0")
+    with pytest.raises(ValueError):
+        MetricsRegistry(parent=MetricsRegistry())
+
+
+# ---------------------------------------------------------------------------
+# engine integration: concurrency, overhead, distributed
+# ---------------------------------------------------------------------------
+
+SF = 0.002
+CB_ROWS = 2_000
+
+
+@pytest.fixture(scope="module")
+def small_db():
+    return generate(SF)
+
+
+def test_concurrent_queries_journal_isolated(small_db):
+    """N threads × mixed TPC-H/ClickBench on per-thread engines: every
+    query's events form one clean tree under its own query ID."""
+    cdb = cb.generate(CB_ROWS)
+    cat = cb.clickbench_catalog(CB_ROWS)
+    n_threads = 4
+    qids_per_thread = [[] for _ in range(n_threads)]
+    errors = []
+
+    def worker(i):
+        try:
+            eng = SiriusEngine(use_kernels=USE_KERNELS)
+            if i % 2 == 0:
+                load_into_engine(eng, small_db)
+                for qid in (1, 6):
+                    eng.execute(QUERIES[qid]())
+                    qids_per_thread[i].append(eng.last_query_id)
+            else:
+                cb.load_into_engine(eng, cdb)
+                for q in ("q1", "q12"):
+                    eng.execute(sql_to_plan(cb.CLICKBENCH_QUERIES[q], cat))
+                    qids_per_thread[i].append(eng.last_query_id)
+        except Exception as e:           # surface, don't deadlock the join
+            errors.append(f"thread {i}: {e!r}")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+    all_qids = [q for qs in qids_per_thread for q in qs]
+    assert all(q is not None for q in all_qids)
+    assert len(set(all_qids)) == len(all_qids), "query IDs must be unique"
+    for qid in all_qids:
+        evs = JOURNAL.events(qid)
+        assert evs, f"no events for {qid}"
+        assert all(e["query_id"] == qid for e in evs)
+        span_ids = [e["span_id"] for e in evs]
+        assert len(set(span_ids)) == len(span_ids)
+        for e in evs:                    # parentage never crosses queries
+            pid = e.get("parent_id")
+            if pid is not None and any(o["span_id"] == pid for o in evs):
+                parent = next(o for o in evs if o["span_id"] == pid)
+                assert parent["query_id"] == qid
+        assert len(span_tree(evs, qid)) >= 1
+
+
+def test_journal_overhead_and_sync_contract(small_db):
+    """Always-on means *cheap*: warm TPC-H with the journal enabled stays
+    within 5% (+2 ms epsilon) of disabled, and the warm path keeps exactly
+    one sync barrier and zero buffer-ledger transfer bytes per query."""
+    eng = SiriusEngine(use_kernels=USE_KERNELS)
+    load_into_engine(eng, small_db)
+    plan = QUERIES[6]
+    eng.execute(plan())                       # warm the plan cache
+    repeats = 15
+
+    def timed(enabled):
+        (JOURNAL.enable if enabled else JOURNAL.disable)()
+        try:
+            eng.execute(plan())               # settle after the toggle
+            syncs0 = instrument.sync_barriers.value
+            xfer0 = eng.buffers.host_transfer_bytes
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                eng.execute(plan())
+            dt = (time.perf_counter() - t0) / repeats
+            syncs = (instrument.sync_barriers.value - syncs0) / repeats
+            xfer = eng.buffers.host_transfer_bytes - xfer0
+            return dt, syncs, xfer
+        finally:
+            JOURNAL.enable()
+
+    t_on, syncs_on, xfer_on = timed(True)
+    t_off, syncs_off, xfer_off = timed(False)
+    assert syncs_on == 1 and syncs_off == 1, \
+        "journal must not add sync barriers"
+    assert xfer_on == 0 and xfer_off == 0, \
+        "journal must not move bytes to the host"
+    assert t_on <= t_off * 1.05 + 0.002, \
+        f"journal overhead: {t_on*1e3:.3f} ms on vs {t_off*1e3:.3f} ms off"
+
+
+def test_distributed_journal_tree_and_compile_attribution(small_db):
+    """In-process 1-shard distributed run: one verified tree per query,
+    fragment/shard/exchange spans present, timers self-consistent."""
+    from repro.core.distributed import DistributedEngine
+    eng = DistributedEngine(small_db, n_shards=1)
+    # suppress speculative backups: a cold run's losing replica would keep
+    # running into the warm run and pollute its (reset) phase timers
+    eng.speculative.min_budget_s = 1e9
+    eng.run_plan(QUERIES[3]())                # cold (compiles)
+    eng.run_plan(QUERIES[3]())                # warm — the run under test
+    qid = eng.last_query_id
+    assert qid is not None
+    evs = JOURNAL.events(qid)
+    cats = {e["cat"] for e in evs}
+    assert {"query", "fragment", "attempt", "shard", "engine"} <= cats
+    assert verify_tree(evs, qid) == []
+    root = next(e for e in evs if e["parent_id"] is None)
+    assert root["name"] == "distributed.query"
+    assert root["attrs"]["shards"] == 1
+    # timer decomposition: parts never exceed the whole
+    t = eng.timers
+    assert t["compute"] + t["exchange"] + t["compile"] + t["other"] \
+        <= t["total"] + 1e-6
+    # exchange spans carry per-shard bytes + skew, mirrored in the summary
+    ex = exchange_report(evs, qid)
+    summary = eng.exchange_summary()
+    if summary:                               # Q3 always exchanges
+        assert ex, "exchange spans missing from the journal"
+        assert all(r["skew_ratio"] >= 1.0 for r in summary)
+        assert all(isinstance(b, int)
+                   for r in summary for b in r["bytes_per_shard"])
+
+
+# ---------------------------------------------------------------------------
+# profile_diff gates
+# ---------------------------------------------------------------------------
+
+
+def _load_profile_diff():
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "scripts", "profile_diff.py")
+    spec = importlib.util.spec_from_file_location("profile_diff", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_profile_diff_kernel_hits_gate():
+    pd = _load_profile_diff()
+    old = {"kernel_hits": {"per_query": {
+        "q3": {"filter": 2, "probe": 1, "fallback": 0},
+        "q6": {"filter": 1, "fallback": 0}}}}
+    new = {"kernel_hits": {"per_query": {
+        "q3": {"filter": 0, "probe": 0, "fallback": 1},
+        "q6": {"filter": 1, "fallback": 0}}}}
+    regressions, report = pd._diff_kernel_hits(old, new)
+    assert regressions == ["q3"]
+    assert any("q3" in line for line in report)
+    # fallback-only counts never count as device hits
+    regressions, _ = pd._diff_kernel_hits(new, new)
+    assert regressions == []
+
+
+def test_profile_diff_dispatch_budget_gate():
+    pd = _load_profile_diff()
+    clean = {"queries": {"q1": {"dispatch": {
+        "syncs_per_query": 1.0, "transfer_bytes_per_query": 0}}}}
+    regressions, _ = pd._check_dispatch_budgets(clean)
+    assert regressions == []
+    dirty = {"queries": {
+        "q1": {"dispatch": {"syncs_per_query": 3.0,
+                            "transfer_bytes_per_query": 0}},
+        "q2": {"dispatch": {"syncs_per_query": 1.0,
+                            "transfer_bytes_per_query": 4096}}}}
+    regressions, report = pd._check_dispatch_budgets(dirty)
+    assert set(regressions) == {"q1", "q2"}
+    assert len(report) == 2
+
+
+def test_profile_diff_skew_table_rendering():
+    pd = _load_profile_diff()
+    dist = {"queries": {"q3": {"exchanges": [
+        {"fragment": "f1_shuffle", "kind": "shuffle",
+         "bytes_per_shard": [300, 100], "skew_ratio": 1.5}]}}}
+    lines = pd._render_skew_table(dist)
+    assert lines and "f1_shuffle" in "\n".join(lines)
+    assert pd._render_skew_table({"queries": {"q3": {}}}) == []
